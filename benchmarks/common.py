@@ -1,0 +1,111 @@
+"""Shared harness for the paper-table benchmarks: a tiny-but-real training
+run for each tuning arm on the synthetic Wikitext2 stand-in corpus."""
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import (ModelConfig, OptimConfig, QuantConfig,
+                                TrainConfig, TuningConfig)
+from repro.core import gptq, policies
+from repro.data import pipeline, synthetic
+from repro.models import registry
+from repro.optim.adamw import make_optimizer
+from repro.train import loop as loop_mod
+from repro.train import step as step_mod
+
+VOCAB = 256
+SEQ = 64
+
+
+def corpus(seed: int = 0, n: int = 120_000):
+    toks = synthetic.corpus(VOCAB, n, seed=seed)
+    return synthetic.split(toks, val_frac=0.08)
+
+
+def base_cfg(**kw) -> ModelConfig:
+    return configs.paper_lm(n_layers=2, d_model=128, n_heads=4, d_ff=256,
+                            vocab=VOCAB, **kw)
+
+
+def eval_ppl(api, params, val_toks, batch_size: int = 8) -> float:
+    ev = jax.jit(api.loss_fn)
+    losses = [float(ev(params, b))
+              for b in pipeline.eval_batches(val_toks, batch_size, SEQ)]
+    return float(np.exp(np.mean(losses)))
+
+
+def run_arm(mode: str, bits: int, train_toks, val_toks, *, steps: int = 120,
+            lr: float | None = None, group_size=None, seed: int = 0,
+            use_gptq: bool = True, quant_kw=None) -> dict:
+    """Train one tuning arm; returns {ppl, seconds, trainable, opt_bytes}."""
+    quant_kw = quant_kw or {}
+    cfg = base_cfg().replace(
+        tuning=TuningConfig(mode=mode),
+        quant=QuantConfig(bits=bits, group_size=group_size, n_grid=8,
+                          **quant_kw))
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(seed)
+    p0 = api.init(rng)
+    # the paper's LoRA+OPTQ arm: calibration-quantize first, then add LoRA
+    if mode == "lora_optq" and use_gptq:
+        calib = jnp.asarray(train_toks[:4 * SEQ].reshape(4, SEQ))
+        p0 = gptq.gptq_quantize_transformer(p0, cfg, calib)
+        from repro.core import lora
+        params = lora.add_lora(p0, rng, cfg.tuning)
+        mask = policies.make_mask(params, cfg)
+    else:
+        params, mask = policies.prepare(p0, cfg, rng)
+
+    # per-mode LR defaults mirror the paper's per-method scales (App. C)
+    if lr is None:
+        lr = {"full": 1e-3, "qat": 1e-3, "lora": 3e-3, "lora_optq": 3e-3,
+              "peqa": 3e-3, "peqa_z": 3e-3}[mode]
+    tcfg = TrainConfig(steps=steps, batch_size=8, seq_len=SEQ,
+                       log_every=10 ** 9, ckpt_every=10 ** 9,
+                       optim=OptimConfig(lr=lr, warmup_steps=10))
+    data = pipeline.PackedLM(train_toks, tcfg.batch_size, SEQ, seed=seed)
+    opt = make_optimizer(tcfg.optim, tcfg.steps)
+    state = {"params": params, "opt": opt.init(params, mask),
+             "step": jnp.int32(0)}
+    ts = step_mod.build_train_step(api, cfg, tcfg, mask, opt)
+    t0 = time.perf_counter()
+    state, _ = loop_mod.train(state, ts, data, tcfg, log=lambda m: None)
+    dt = time.perf_counter() - t0
+    return {
+        "ppl": eval_ppl(api, state["params"], val_toks),
+        "seconds": dt,
+        "trainable": policies.trainable_count(state["params"], mask),
+        "opt_bytes": opt.state_bytes(state["opt"]),
+        "params": state["params"],
+        "cfg": cfg,
+    }
+
+
+def zero_shot_ppl(mode: str, bits: int, val_toks, group_size=None,
+                  seed: int = 0) -> float:
+    """No-finetune perplexity (RTN-quantized vs fp) — Table 7 baseline."""
+    cfg = base_cfg().replace(tuning=TuningConfig(mode=mode),
+                             quant=QuantConfig(bits=bits,
+                                               group_size=group_size, n_grid=8))
+    api = registry.build(cfg)
+    p0 = api.init(jax.random.PRNGKey(seed))
+    params, _ = policies.prepare(p0, cfg, jax.random.PRNGKey(seed))
+    return eval_ppl(api, params, val_toks)
+
+
+def pretrain_base(train_toks, val_toks, steps: int = 400, seed: int = 0):
+    """Pretrain a tiny fp model so quantization has something to damage
+    (mirrors the paper's 'pre-trained LLM' starting point)."""
+    res = run_arm("full", 16, train_toks, val_toks, steps=steps,
+                  lr=2e-3, seed=seed, quant_kw={})
+    return res
+
+
+def fmt_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,64 @@
+"""Benchmark harness — one module per paper table (DESIGN.md §7).
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2] [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (kernel_bench, table1_memory, table2_ppl,
+                        table3_scaling, table4_params, table5_grouping,
+                        table7_restore, table17_zeropoint,
+                        tableJ_alphatuning)
+
+MODULES = {
+    "table1": table1_memory,
+    "table2": table2_ppl,
+    "table3": table3_scaling,
+    "table4": table4_params,
+    "table5": table5_grouping,
+    "table7": table7_restore,
+    "table17": table17_zeropoint,
+    "tableJ": tableJ_alphatuning,
+    "kernel": kernel_bench,
+}
+
+# quick set for --fast (skips the long training arms)
+FAST = ("table1", "table4", "kernel")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else (
+        list(FAST) if args.fast else list(MODULES))
+    print("name,us_per_call,derived")
+
+    def report(name, us, derived):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    t0 = time.time()
+    failed = []
+    for name in names:
+        try:
+            MODULES[name].run(report)
+        except Exception:  # noqa: BLE001 — keep the harness running
+            failed.append(name)
+            traceback.print_exc(file=sys.stderr)
+            report(f"{name}/ERROR", 0.0, "see stderr")
+    report("harness/total", (time.time() - t0) * 1e6,
+           f"modules={len(names)} failed={failed or 'none'}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper Table 17 (App. K): train zero-points only vs scales only (PEQA) vs
+both.  Claim: zero-points-only is far worse; both ≈ scales-only."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from benchmarks.table2_ppl import finetune_from
+from repro.configs.base import QuantConfig, TuningConfig
+from repro.core import policies
+from repro.models import registry
+
+
+def finetune_zero_only(params0, bits, train_toks, val_toks, steps=120,
+                       lr=3e-3):
+    """zero-points trainable, scales frozen."""
+    from repro.configs.base import OptimConfig, TrainConfig
+    from repro.data import pipeline
+    from repro.optim.adamw import make_optimizer
+    from repro.train import loop as loop_mod, step as step_mod
+    cfg = common.base_cfg().replace(
+        tuning=TuningConfig(mode="peqa"),
+        quant=QuantConfig(bits=bits, n_grid=8))
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(1)
+    p, _ = policies.prepare(jax.tree.map(jnp.array, params0), cfg, rng)
+    mask = jax.tree_util.tree_map_with_path(
+        lambda kp, l: str(getattr(kp[-1], "key", "")) == "zero", p)
+    tcfg = TrainConfig(steps=steps, batch_size=8, seq_len=common.SEQ,
+                       log_every=10 ** 9, ckpt_every=10 ** 9,
+                       optim=OptimConfig(lr=lr, warmup_steps=10))
+    data = pipeline.PackedLM(train_toks, 8, common.SEQ, seed=3)
+    opt = make_optimizer(tcfg.optim, tcfg.steps)
+    state = {"params": p, "opt": opt.init(p, mask), "step": jnp.int32(0)}
+    ts = step_mod.build_train_step(api, cfg, tcfg, mask, opt)
+    state, _ = loop_mod.train(state, ts, data, tcfg, log=lambda m: None)
+    return common.eval_ppl(api, state["params"], val_toks)
+
+
+def run(report):
+    train_toks, val_toks = common.corpus()
+    base = common.pretrain_base(train_toks, val_toks, steps=400)
+    bits = 2
+    t0 = time.perf_counter()
+    z_only = finetune_zero_only(base["params"], bits, train_toks, val_toks)
+    s_only, _, _ = finetune_from(base["params"], "peqa", bits, train_toks,
+                                 val_toks, steps=120, lr=3e-3)
+    both, _, _ = finetune_from(base["params"], "peqa_z", bits, train_toks,
+                               val_toks, steps=120, lr=3e-3)
+    us = (time.perf_counter() - t0) * 1e6
+    report("table17/w2", us,
+           f"zero_only={z_only:.3f} scales_only={s_only:.3f} both={both:.3f}")
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

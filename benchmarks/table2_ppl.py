@@ -1,0 +1,91 @@
+"""Paper Table 2: PEQA vs QAT vs LoRA+OPTQ perplexity at 4- and 3-bit.
+
+The paper's claim to reproduce: QAT ≲ PEQA ≪ LoRA+OPTQ at 3-bit, and all
+three close at 4-bit.  CPU-scale protocol: pretrain a tiny fp LM on the
+synthetic corpus (the "pre-trained LLM"), then fine-tune each arm from it.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks import common
+from repro.core import policies, qat as qat_mod, peqa as peqa_mod, gptq, lora
+from repro.configs.base import OptimConfig, QuantConfig, TrainConfig, TuningConfig
+from repro.data import pipeline
+from repro.models import registry
+from repro.optim.adamw import make_optimizer
+from repro.train import loop as loop_mod, step as step_mod
+
+import jax.numpy as jnp
+
+
+def finetune_from(params0, mode, bits, train_toks, val_toks, steps=100,
+                  lr=None, group_size=None):
+    cfg = common.base_cfg().replace(
+        tuning=TuningConfig(mode=mode),
+        quant=QuantConfig(bits=bits, group_size=group_size, n_grid=8))
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(1)
+    # each arm starts from ITS OWN copy (train steps donate their buffers)
+    params0 = jax.tree.map(jnp.array, params0)
+    if mode == "lora_optq":
+        calib = jnp.asarray(train_toks[:4 * common.SEQ].reshape(4, common.SEQ))
+        p = gptq.gptq_quantize_transformer(params0, cfg, calib)
+        p = lora.add_lora(p, rng, cfg.tuning)
+        mask = policies.make_mask(p, cfg)
+    else:
+        p, mask = policies.prepare(params0, cfg, rng)
+    lr = lr or {"qat": 3e-4, "peqa": 2e-3, "lora_optq": 2e-3,
+                "lora": 2e-3, "full": 3e-4, "peqa_z": 2e-3}[mode]
+    tcfg = TrainConfig(steps=steps, batch_size=8, seq_len=common.SEQ,
+                       log_every=10 ** 9, ckpt_every=10 ** 9,
+                       optim=OptimConfig(lr=lr, warmup_steps=10))
+    data = pipeline.PackedLM(train_toks, 8, common.SEQ, seed=7)
+    opt = make_optimizer(tcfg.optim, tcfg.steps)
+    state = {"params": p, "opt": opt.init(p, mask), "step": jnp.int32(0)}
+    ts = step_mod.build_train_step(api, cfg, tcfg, mask, opt)
+    state, _ = loop_mod.train(state, ts, data, tcfg, log=lambda m: None)
+    return common.eval_ppl(api, state["params"], val_toks), mask, state
+
+
+def run(report, steps=120):
+    """Bits 4 and 3 mirror the paper; 2-bit is the scaled-down stress arm —
+    at d_model=128 RTN damage only becomes visible below 3 bits (the tiny
+    model's analog of the paper's 3-bit regime; see EXPERIMENTS.md)."""
+    train_toks, val_toks = common.corpus()
+    base = common.pretrain_base(train_toks, val_toks, steps=400)
+    report("table2/pretrained_fp", base["seconds"] * 1e6,
+           f"ppl={base['ppl']:.3f} (full-precision reference)")
+    for bits in (4, 3, 2):
+        rtn = common.eval_ppl(
+            *_rtn_model(base["params"], bits), val_toks)
+        report(f"table2/rtn_w{bits}", 0.0, f"ppl={rtn:.3f} (no finetune)")
+        for mode in ("qat", "lora_optq", "peqa"):
+            t0 = time.perf_counter()
+            best = None
+            for lr in _LRS[mode]:  # small sweep, paper App. B/C protocol
+                ppl, _, _ = finetune_from(base["params"], mode, bits,
+                                          train_toks, val_toks, steps=steps,
+                                          lr=lr)
+                best = min(best, ppl) if best is not None else ppl
+            us = (time.perf_counter() - t0) * 1e6
+            report(f"table2/{mode}_w{bits}", us, f"ppl={best:.3f}")
+
+
+_LRS = {"qat": (3e-4, 1e-3), "lora_optq": (1e-3, 3e-3),
+        "peqa": (1e-3, 3e-3)}
+
+
+def _rtn_model(params0, bits):
+    cfg = common.base_cfg().replace(
+        tuning=TuningConfig(mode="peqa"), quant=QuantConfig(bits=bits, n_grid=8))
+    api = registry.build(cfg)
+    p, _ = policies.prepare(jax.tree.map(jnp.array, params0), cfg,
+                            jax.random.PRNGKey(0))
+    return api, p
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

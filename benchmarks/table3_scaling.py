@@ -1,0 +1,75 @@
+"""Paper Table 3: scalability — LoRA (fp16) vs PEQA (4/3-bit) perplexity
+across model sizes.  The paper's claim: the PEQA↔LoRA gap SHRINKS as the
+model grows.  CPU protocol: three widths of the tiny LM."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from benchmarks.table2_ppl import finetune_from
+from repro import configs
+from repro.configs.base import OptimConfig, QuantConfig, TrainConfig, TuningConfig
+from repro.core import policies
+from repro.data import pipeline
+from repro.models import registry
+from repro.optim.adamw import make_optimizer
+from repro.train import loop as loop_mod, step as step_mod
+
+SIZES = {"S": dict(d_model=64, d_ff=128), "M": dict(d_model=128, d_ff=256),
+         "L": dict(d_model=256, d_ff=512)}
+
+
+def pretrain(size_kw, train_toks, val_toks, steps=400):
+    cfg = configs.paper_lm(n_layers=2, n_heads=4, vocab=common.VOCAB,
+                           **size_kw).replace(tuning=TuningConfig(mode="full"))
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p, mask = policies.prepare(api.init(rng), cfg, rng)
+    tcfg = TrainConfig(steps=steps, batch_size=8, seq_len=common.SEQ,
+                       log_every=10 ** 9, ckpt_every=10 ** 9,
+                       optim=OptimConfig(lr=2e-3, warmup_steps=10))
+    data = pipeline.PackedLM(train_toks, 8, common.SEQ, seed=1)
+    opt = make_optimizer(tcfg.optim, tcfg.steps)
+    state = {"params": p, "opt": opt.init(p, mask), "step": jnp.int32(0)}
+    ts = step_mod.build_train_step(api, cfg, tcfg, mask, opt)
+    state, _ = loop_mod.train(state, ts, data, tcfg, log=lambda m: None)
+    return cfg, api, state["params"]
+
+
+def finetune_sized(cfg0, params0, mode, bits, train_toks, val_toks,
+                   steps=120, lr=2e-3):
+    cfg = cfg0.replace(tuning=TuningConfig(mode=mode),
+                       quant=QuantConfig(bits=bits, n_grid=8))
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(1)
+    p, mask = policies.prepare(jax.tree.map(jnp.array, params0), cfg, rng)
+    tcfg = TrainConfig(steps=steps, batch_size=8, seq_len=common.SEQ,
+                       log_every=10 ** 9, ckpt_every=10 ** 9,
+                       optim=OptimConfig(lr=lr, warmup_steps=10))
+    data = pipeline.PackedLM(train_toks, 8, common.SEQ, seed=2)
+    opt = make_optimizer(tcfg.optim, tcfg.steps)
+    state = {"params": p, "opt": opt.init(p, mask), "step": jnp.int32(0)}
+    ts = step_mod.build_train_step(api, cfg, tcfg, mask, opt)
+    state, _ = loop_mod.train(state, ts, data, tcfg, log=lambda m: None)
+    return common.eval_ppl(api, state["params"], val_toks)
+
+
+def run(report):
+    train_toks, val_toks = common.corpus()
+    for name, kw in SIZES.items():
+        t0 = time.perf_counter()
+        cfg0, api, p0 = pretrain(kw, train_toks, val_toks)
+        lora = finetune_sized(cfg0, p0, "lora", 16, train_toks, val_toks)
+        peqa4 = finetune_sized(cfg0, p0, "peqa", 4, train_toks, val_toks)
+        peqa2 = finetune_sized(cfg0, p0, "peqa", 2, train_toks, val_toks)
+        us = (time.perf_counter() - t0) * 1e6
+        report(f"table3/{name}_d{kw['d_model']}", us,
+               f"lora16={lora:.3f} peqa4={peqa4:.3f} peqa2={peqa2:.3f} "
+               f"gap4={peqa4 - lora:+.3f} gap2={peqa2 - lora:+.3f}")
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

@@ -1,0 +1,27 @@
+"""Paper Table 5: group-wise quantization — perplexity improves (and
+learnable params grow) as the group size g shrinks."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from benchmarks.table2_ppl import finetune_from
+
+
+def run(report):
+    train_toks, val_toks = common.corpus()
+    base = common.pretrain_base(train_toks, val_toks, steps=400)
+    for g in (None, 64, 32, 16):
+        t0 = time.perf_counter()
+        ppl, mask, state = finetune_from(base["params"], "peqa", 2,
+                                         train_toks, val_toks, steps=120,
+                                         lr=3e-3, group_size=g)
+        us = (time.perf_counter() - t0) * 1e6
+        from repro.core import policies
+        n = policies.trainable_count(state["params"], mask)
+        label = "per-channel" if g is None else f"g{g}"
+        report(f"table5/{label}", us, f"ppl={ppl:.3f} learnable={n}")
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

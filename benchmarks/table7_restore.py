@@ -1,0 +1,30 @@
+"""Paper Table 7 (MMLU restoration, scaled): RTN quantization damages the
+pretrained model; PEQA-tuning the scales restores it toward fp quality —
+without touching the integer backbone."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from benchmarks.table2_ppl import finetune_from, _rtn_model
+
+
+def run(report):
+    train_toks, val_toks = common.corpus()
+    base = common.pretrain_base(train_toks, val_toks, steps=400)
+    report("table7/fp_base", 0.0, f"ppl={base['ppl']:.3f}")
+    for bits in (3, 2):
+        api, p = _rtn_model(base["params"], bits)
+        rtn_ppl = common.eval_ppl(api, p, val_toks)
+        t0 = time.perf_counter()
+        ppl, _, _ = finetune_from(base["params"], "peqa", bits, train_toks,
+                                  val_toks, steps=150, lr=3e-3)
+        us = (time.perf_counter() - t0) * 1e6
+        restored = (rtn_ppl - ppl) / max(rtn_ppl - base["ppl"], 1e-9)
+        report(f"table7/w{bits}", us,
+               f"rtn={rtn_ppl:.3f} peqa={ppl:.3f} "
+               f"degradation_recovered={100 * restored:.0f}%")
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

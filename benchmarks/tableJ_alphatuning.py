@@ -1,0 +1,89 @@
+"""Paper App. J (Table 15): PEQA vs AlphaTuning (BCQ, first-alpha-only
+trainable).  Claim: PEQA's uniform single-scale beats AlphaTuning."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from benchmarks.table2_ppl import finetune_from
+from repro.configs.base import OptimConfig, TrainConfig
+from repro.core import alphatuning as at
+from repro.data import pipeline
+from repro.models import registry
+from repro.optim.adamw import make_optimizer
+
+
+def _bcq_loss_fn(cfg):
+    """Tiny-LM loss with BCQ linears (module-level fwd using linear_apply_bcq)."""
+    def loss_fn(params, batch):
+        # monkey-patch-free: dense transformer with BCQ layers is evaluated
+        # by dequantizing BCQ → w and reusing the standard forward
+        def walk(tree):
+            out = {}
+            for k, v in tree.items():
+                if isinstance(v, dict):
+                    if "alpha1" in v and "signs" in v:
+                        w = at.bcq_weight(v)
+                        out[k] = {"w": w,
+                                  **{kk: vv for kk, vv in v.items()
+                                     if kk not in ("alpha1", "alpha_rest",
+                                                   "signs")}}
+                    else:
+                        out[k] = walk(v)
+                else:
+                    out[k] = v
+            return out
+        api = registry.build(cfg)
+        return api.loss_fn(walk(params), batch)
+    return loss_fn
+
+
+def run(report):
+    train_toks, val_toks = common.corpus()
+    base = common.pretrain_base(train_toks, val_toks, steps=400)
+    bits = 2
+    t0 = time.perf_counter()
+    # PEQA arm
+    peqa_ppl, _, _ = finetune_from(base["params"], "peqa", bits, train_toks,
+                                   val_toks, steps=120, lr=3e-3)
+    # AlphaTuning arm
+    from repro.configs.base import QuantConfig, TuningConfig
+    cfg = common.base_cfg().replace(tuning=TuningConfig(mode="full"),
+                                    quant=QuantConfig(bits=bits))
+    p = at.alphatuning_params(jax.tree.map(jnp.array, base["params"]),
+                              cfg.quant)
+    mask = at.alphatuning_mask(p)
+    loss_fn = _bcq_loss_fn(cfg)
+    tcfg = TrainConfig(steps=120, batch_size=8, seq_len=common.SEQ,
+                       log_every=10 ** 9, ckpt_every=10 ** 9,
+                       optim=OptimConfig(lr=3e-3, warmup_steps=10))
+    data = pipeline.PackedLM(train_toks, 8, common.SEQ, seed=4)
+    opt = make_optimizer(tcfg.optim, tcfg.steps)
+    state = {"params": p, "opt": opt.init(p, mask), "step": jnp.int32(0)}
+    import repro.train.loop as loop_mod
+
+    @jax.jit
+    def ts(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn, allow_int=True)(
+            state["params"], batch)
+        newp, newo, gn = opt.update(grads, state["opt"], state["params"], mask)
+        return ({"params": newp, "opt": newo, "step": state["step"] + 1},
+                {"loss": loss, "grad_norm": gn, "lr": opt.schedule(newo["count"])})
+
+    state, _ = loop_mod.train(state, ts, data, tcfg, log=lambda m: None)
+    ev = jax.jit(loss_fn)
+    import numpy as np
+    losses = [float(ev(state["params"], b))
+              for b in pipeline.eval_batches(val_toks, 8, common.SEQ)]
+    alpha_ppl = float(np.exp(np.mean(losses)))
+    us = (time.perf_counter() - t0) * 1e6
+    report("tableJ/w2", us,
+           f"alphatuning={alpha_ppl:.3f} peqa={peqa_ppl:.3f} "
+           f"peqa_wins={peqa_ppl < alpha_ppl}")
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

@@ -1,0 +1,66 @@
+"""Multi-task serving from ONE quantized backbone (paper §3.3):
+
+two PEQA "tasks" (scale sets) are tuned on different corpora, stored in a
+ScaleBank, and served from a single integer backbone with O(MB) hot swaps —
+the Table 1 'fast task switching + fast inference' cell.
+
+    PYTHONPATH=src python examples/serve_multitask.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import OptimConfig, QuantConfig, TrainConfig, TuningConfig
+from repro.core import policies
+from repro.core.scale_bank import ScaleBank
+from repro.data import pipeline, synthetic
+from repro.models import registry
+from repro.optim.adamw import make_optimizer
+from repro.train import loop, step
+from repro.train.serve import Engine
+
+cfg = configs.paper_lm(n_layers=2, d_model=128, n_heads=4, d_ff=256,
+                       vocab=256).replace(
+    tuning=TuningConfig(mode="peqa"), quant=QuantConfig(bits=4, n_grid=4))
+api = registry.build(cfg)
+rng = jax.random.PRNGKey(0)
+
+# one shared backbone, two tasks = two corpora with different bigram structure
+backbone, mask = policies.prepare(api.init(rng), cfg, rng)
+bank = ScaleBank()
+
+for task, seed in (("taskA", 0), ("taskB", 99)):
+    toks = synthetic.corpus(cfg.vocab_size, 60_000, seed=seed)
+    train_toks, _ = synthetic.split(toks)
+    tcfg = TrainConfig(steps=120, batch_size=8, seq_len=64, log_every=60,
+                       ckpt_every=10 ** 9, optim=OptimConfig(lr=3e-3))
+    data = pipeline.PackedLM(train_toks, 8, 64, seed=seed)
+    opt = make_optimizer(tcfg.optim, tcfg.steps)
+    p = jax.tree.map(jnp.array, backbone)
+    state = {"params": p, "opt": opt.init(p, mask), "step": jnp.int32(0)}
+    ts = step.build_train_step(api, cfg, tcfg, mask, opt)
+    print(f"[serve] tuning {task} scales…")
+    state, _ = loop.train(state, ts, data, tcfg, log=lambda m: None)
+    bank.add(task, state["params"])
+    print(f"[serve] {task}: scale payload {bank.nbytes(task):,} B")
+
+# ---- serve both tasks from one engine ------------------------------------
+engine = Engine(api, jax.tree.map(jnp.array, backbone), bank=bank)
+prompt = jnp.asarray(np.tile(np.arange(8, dtype=np.int32), (2, 1)))
+
+for task in ("taskA", "taskB", "taskA"):
+    dt = engine.switch_task(task)
+    out = engine.generate(prompt, n_new=12)
+    print(f"[serve] {task}: switch={dt * 1e3:.2f}ms "
+          f"generated={np.asarray(out[0, 8:])}")
+
+# per-task outputs must differ (different scales steer the same backbone)
+engine.switch_task("taskA")
+outA = np.asarray(engine.generate(prompt, n_new=12))
+engine.switch_task("taskB")
+outB = np.asarray(engine.generate(prompt, n_new=12))
+print(f"[serve] tasks produce different continuations: "
+      f"{not np.array_equal(outA, outB)}")

@@ -1,0 +1,15 @@
+"""deepseek-moe-16b — 28L d_model=2048 16H (MHA kv=16) expert d_ff=1408
+vocab=102400; 64 routed experts top-6 + 2 shared experts (fine-grained)
+[arXiv:2401.06066; hf].  Expert-parallel sharding (64 % 16 == 0).
+Simplification: layer 0 is MoE too (real ckpt has one dense layer)."""
+from repro.configs.base import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-moe-16b", family="moe",
+        n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=1408, vocab_size=102400, rope_theta=10000.0,
+        moe=MoEConfig(n_experts=64, top_k=6, n_shared_experts=2,
+                      expert_sharding="expert"),
+    )

@@ -1,0 +1,15 @@
+"""mixtral-8x7b — 32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000;
+8 experts top-2, sliding-window attention (4096) [arXiv:2401.04088; hf].
+Tensor sharding within experts (8 experts do not divide the 16-way model
+axis); SWA makes this MoE arch eligible for long_500k (ring KV cache)."""
+from repro.configs.base import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x7b", family="moe",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+        d_ff=14336, vocab_size=32000, rope_theta=1000000.0,
+        swa_window=4096,
+        moe=MoEConfig(n_experts=8, top_k=2, expert_sharding="tensor"),
+    )

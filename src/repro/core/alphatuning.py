@@ -1,0 +1,101 @@
+"""AlphaTuning (Kwon et al. [43]) — paper Appendix J comparison.
+
+Binary-coding quantization (BCQ): W ≈ Σ_{b=1..B} α_b ⊙ sign-matrix B_b with
+per-channel α_b, built greedily (alternating sign/least-squares).  Only α_1
+is trainable (the paper's point: the other b−1 static scales are dead
+weight → PEQA's single uniform scale wins; Table 15 reproduces this).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import peqa
+
+
+def bcq_decompose(w: jax.Array, bits: int, n_iter: int = 6):
+    """w (n, m) → (alphas (bits, n), signs (bits, n, m) ∈ {−1,+1})."""
+    w = w.astype(jnp.float32)
+    n, m = w.shape
+    signs = []
+    alphas = []
+    r = w
+    for _ in range(bits):
+        b = jnp.where(r >= 0, 1.0, -1.0)
+        a = jnp.mean(jnp.abs(r), axis=-1)
+        signs.append(b)
+        alphas.append(a)
+        r = r - a[:, None] * b
+    signs = jnp.stack(signs)
+    alphas = jnp.stack(alphas)
+    for _ in range(n_iter):  # alternating refinement
+        for i in range(bits):
+            r = w - jnp.einsum("bn,bnm->nm", alphas, signs) \
+                + alphas[i][:, None] * signs[i]
+            b = jnp.where(r >= 0, 1.0, -1.0)
+            a = jnp.sum(r * b, axis=-1) / m
+            signs = signs.at[i].set(b)
+            alphas = alphas.at[i].set(a)
+    return alphas, signs
+
+
+def bcq_apply(alphas: jax.Array, signs: jax.Array) -> jax.Array:
+    return jnp.einsum("bn,bnm->nm", alphas,
+                      jax.lax.stop_gradient(signs))
+
+
+def alphatuning_params(params: dict, qcfg: QuantConfig) -> dict:
+    """fp tree → BCQ tree: eligible 'w' → {'alpha': (B,n) [α_1 trainable],
+    'alpha_rest' frozen via mask, 'signs': int8 (B,n,m)}."""
+    def walk(tree, prefix=""):
+        out = {}
+        for key, val in tree.items():
+            path = f"{prefix}/{key}"
+            if isinstance(val, dict):
+                if "w" in val and not isinstance(val["w"], dict) and \
+                        peqa.eligible(f"{path}/w", val["w"], qcfg):
+                    w = val["w"]
+                    lead = w.shape[:-2]
+                    flat = w.reshape(-1, *w.shape[-2:])
+                    a, s = jax.vmap(lambda wi: bcq_decompose(wi, qcfg.bits))(flat)
+                    # (stack, B, n[, m]) → restore leading layer dims
+                    a = a.reshape(*lead, *a.shape[1:])
+                    s = s.reshape(*lead, *s.shape[1:])
+                    # AlphaTuning trains ONLY α_1; store it as its own leaf
+                    out[key] = {**{k: v for k, v in val.items() if k != "w"},
+                                "alpha1": a[..., 0, :],
+                                "alpha_rest": a[..., 1:, :],
+                                "signs": s.astype(jnp.int8)}
+                else:
+                    out[key] = walk(val, path)
+            else:
+                out[key] = val
+        return out
+    return walk(params)
+
+
+def alphatuning_mask(params: dict) -> dict:
+    """Trainable = α_1 only (first BCQ scale), per AlphaTuning."""
+    def pred(kp, leaf):
+        return str(getattr(kp[-1], "key", "")) == "alpha1"
+    return jax.tree_util.tree_map_with_path(lambda kp, l: bool(pred(kp, l)),
+                                            params)
+
+
+def bcq_weight(p: dict) -> jax.Array:
+    """Reassemble W = Σ_b α_b ⊙ B_b from (alpha1, alpha_rest, signs);
+    supports stacked leading layer dims."""
+    alphas = jnp.concatenate([p["alpha1"][..., None, :], p["alpha_rest"]],
+                             axis=-2)
+    signs = jax.lax.stop_gradient(p["signs"].astype(jnp.float32))
+    return jnp.einsum("...bn,...bnm->...nm", alphas, signs)
+
+
+def linear_apply_bcq(p: dict, x: jax.Array) -> jax.Array:
+    """Forward for a BCQ layer: y = x·(Σ α_b B_b)ᵀ; only α_1 trains
+    (alpha_rest is masked frozen by alphatuning_mask)."""
+    w = bcq_weight(p)
+    y = jnp.einsum("...m,nm->...n", x, w.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype) + (p["b"].astype(x.dtype) if "b" in p else 0)

@@ -1,0 +1,77 @@
+"""LoRA adapters — the paper's PEFT baseline (QV4 and QKVO16 configs)."""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TuningConfig
+
+
+def add_lora(params: dict, rng, tcfg: TuningConfig) -> dict:
+    """Insert lora_a/lora_b into every target projection subtree.
+
+    Targets are matched by subtree NAME (wq/wk/wv/wo — paper's QV4 =
+    ('wq','wv') rank 4; QKVO16 = all four, rank 16).
+    """
+    targets = set(tcfg.lora_targets)
+    r = tcfg.lora_rank
+    counter = [0]
+
+    def walk(tree, prefix=""):
+        out = {}
+        for key, val in tree.items():
+            if isinstance(val, dict):
+                sub = walk(val, f"{prefix}/{key}")
+                if key in targets and ("w" in val or "qw" in val):
+                    mat = val.get("w", val.get("qw"))
+                    lead = mat.shape[:-2]
+                    n = mat.shape[-2]
+                    m = val["w"].shape[-1] if "w" in val else val["qw"].shape[-1] * 8
+                    counter[0] += 1
+                    ka, _ = jax.random.split(jax.random.fold_in(rng, counter[0]))
+                    sub["lora_a"] = (jax.random.normal(ka, (*lead, r, m))
+                                     * m ** -0.5).astype(jnp.float32)
+                    sub["lora_b"] = jnp.zeros((*lead, n, r), jnp.float32)
+                out[key] = sub
+            else:
+                out[key] = val
+        return out
+
+    return walk(params)
+
+
+def lora_param_count(params: dict) -> int:
+    total = 0
+
+    def count(kp, leaf):
+        nonlocal total
+        if any("lora" in str(getattr(k, "key", k)) for k in kp):
+            total += leaf.size
+    jax.tree_util.tree_map_with_path(count, params)
+    return total
+
+
+def merge_lora(params: dict, tcfg: TuningConfig) -> dict:
+    """Fold LoRA into fp weights (only valid for fp backbones — folding into
+    a quantized backbone breaks the integer structure; that is exactly the
+    paper's PEFT+PTQ / PTQ+PEFT task-switching argument)."""
+    scale = tcfg.lora_alpha
+
+    def walk(tree):
+        out = {}
+        for key, val in tree.items():
+            if isinstance(val, dict):
+                val = walk(val)
+                if "lora_a" in val and "w" in val:
+                    delta = jnp.einsum("...nr,...rm->...nm",
+                                       val["lora_b"], val["lora_a"]) * scale
+                    val = dict(val, w=val["w"] + delta.astype(val["w"].dtype))
+                    val.pop("lora_a"), val.pop("lora_b")
+                out[key] = val
+            else:
+                out[key] = val
+        return out
+
+    return walk(params)

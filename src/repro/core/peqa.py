@@ -1,0 +1,151 @@
+"""PEQA model transform — the paper's step (a): Decomposition.
+
+Walks a model's param tree, replaces every eligible fully-connected weight
+``{"w": (…, n, m)}`` with its quantized form
+``{"qw": packed codes, "scale": (…, n, G), "zero": (…, n, G)}`` (Eq. (1)),
+vmapping RTN over stacked leading dims (layers / groups / experts).
+
+Eligibility (DESIGN.md §Arch-applicability): matrices only, not embeddings /
+routers / convs / recurrent sLSTM kernels / positional tables; LM head only
+when ``quant.quantize_lm_head``.
+"""
+from __future__ import annotations
+
+import re
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core.quant import QuantSpec, pack_codes, rtn_quantize, unpack_codes
+
+# paths whose "w" leaf must never be quantized
+EXCLUDE = re.compile(
+    r".*(router|embed|conv|/sr|/sb|pos|lm_head).*")
+
+
+def eligible(path: str, leaf, qcfg: QuantConfig) -> bool:
+    if not path.endswith("/w"):
+        return False
+    if jnp.ndim(leaf) < 2:
+        return False
+    if EXCLUDE.match(path) and not (
+            qcfg.quantize_lm_head and "lm_head" in path):
+        return False
+    m = leaf.shape[-1]
+    spec = qcfg.spec()
+    if spec.packs and m % 8:
+        return False
+    if spec.group_size and m % spec.group_size:
+        return False
+    return True
+
+
+def quantize_leaf(w, qcfg: QuantConfig):
+    """(…, n, m) fp → dict(qw, scale, zero); leading dims vmapped."""
+    spec = qcfg.spec()
+    lead = w.shape[:-2]
+    n, m = w.shape[-2:]
+    flat = w.reshape(-1, n, m).astype(jnp.float32)
+
+    def one(wi):
+        q, s, z = rtn_quantize(wi, spec, n_grid=qcfg.n_grid)
+        return (pack_codes(q) if spec.packs else q), s, z
+
+    qw, s, z = jax.lax.map(one, flat)   # sequential: bounds peak memory
+    return {
+        "qw": qw.reshape(*lead, *qw.shape[1:]),
+        "scale": s.reshape(*lead, *s.shape[1:]),
+        "zero": z.reshape(*lead, *z.shape[1:]),
+    }
+
+
+def _walk(tree: dict, qcfg: QuantConfig, prefix: str, stats: dict) -> dict:
+    out = {}
+    for key, val in tree.items():
+        path = f"{prefix}/{key}"
+        if isinstance(val, dict):
+            if "w" in val and not isinstance(val["w"], dict) \
+                    and eligible(f"{path}/w", val["w"], qcfg):
+                q = quantize_leaf(val["w"], qcfg)
+                rest = {k: v for k, v in val.items() if k != "w"}
+                out[key] = {**q, **rest}
+                stats["quantized"] += int(np.prod(val["w"].shape))
+            else:
+                out[key] = _walk(val, qcfg, path, stats)
+        else:
+            out[key] = val
+            if key == "w":
+                stats["kept_fp"] += int(np.prod(jnp.shape(val)))
+    return out
+
+
+def quantize_params(params: dict, qcfg: QuantConfig,
+                    verbose: bool = False) -> dict:
+    """fp param tree → PEQA param tree (integer backbone + scales)."""
+    stats = {"quantized": 0, "kept_fp": 0}
+    out = _walk(params, qcfg, "", stats)
+    if verbose:
+        tot = stats["quantized"] + stats["kept_fp"]
+        print(f"[peqa] quantized {stats['quantized']:,} of {tot:,} matrix "
+              f"params ({100 * stats['quantized'] / max(tot, 1):.1f}%) to "
+              f"{qcfg.bits}-bit")
+    return out
+
+
+def dequantize_params(params: dict, qcfg: QuantConfig) -> dict:
+    """PEQA tree → fp tree (merges Δs into Ŵ; for export / comparisons)."""
+    spec = qcfg.spec()
+
+    def walk(tree):
+        out = {}
+        for key, val in tree.items():
+            if isinstance(val, dict):
+                if "qw" in val:
+                    qw, s, z = val["qw"], val["scale"], val["zero"]
+                    lead = qw.shape[:-2]
+                    n = qw.shape[-2]
+                    flatq = qw.reshape(-1, *qw.shape[-2:])
+                    flats = s.reshape(-1, *s.shape[-2:])
+                    flatz = z.reshape(-1, *z.shape[-2:])
+
+                    def deq(args):
+                        q_, s_, z_ = args
+                        codes = unpack_codes(q_) if spec.packs else q_
+                        g = s_.shape[-1]
+                        m = codes.shape[-1]
+                        cg = codes.reshape(n, g, m // g).astype(jnp.float32)
+                        w = s_[..., None] * (cg - z_[..., None])
+                        return w.reshape(n, m)
+
+                    w = jax.lax.map(deq, (flatq, flats, flatz))
+                    w = w.reshape(*lead, *w.shape[1:])
+                    out[key] = {"w": w, **{k: v for k, v in val.items()
+                                           if k not in ("qw", "scale", "zero")}}
+                else:
+                    out[key] = walk(val)
+            else:
+                out[key] = val
+        return out
+
+    return walk(params)
+
+
+def model_size_bytes(params: dict, qcfg: QuantConfig) -> int:
+    """Deployed size: b-bit codes + fp16 scales/zeros + fp16 fp leaves."""
+    spec = qcfg.spec()
+    total = 0
+
+    def count(path, leaf):
+        nonlocal total
+        if path.endswith("/qw"):
+            n_codes = leaf.size * (8 if spec.packs else 1)
+            total += n_codes * qcfg.bits // 8
+        else:
+            total += leaf.size * 2   # fp16 deployment
+    jax.tree_util.tree_map_with_path(
+        lambda kp, l: count("/".join(str(getattr(k, 'key', k)) for k in kp), l),
+        params)
+    return total

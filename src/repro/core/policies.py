@@ -1,0 +1,92 @@
+"""TuningPolicy: one entry point that prepares (params, trainable_mask) for
+any of the paper's five comparison arms.
+
+    full      — full fine-tuning (fp backbone, everything trainable)
+    lora      — LoRA on the fp backbone (paper's PEFT baseline)
+    lora_optq — LoRA on an OPTQ/RTN-quantized backbone (PTQ+PEFT arm)
+    qat       — fake-quant STE, w + scales trainable (upper bound)
+    peqa      — the paper: integer backbone frozen, ONLY scales trainable
+    peqa_z    — Table 17 ablation: scales + zero-points trainable
+
+The trainable mask drives the masked optimizer (optim/adamw.py): frozen
+leaves get NO optimizer state — that is the PEFT memory claim, measured in
+benchmarks/table1_memory.py.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import lora, peqa, qat
+
+
+def _path_str(kp) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+
+
+def _mask(params, pred) -> dict:
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: bool(pred(_path_str(kp), leaf)), params)
+
+
+def _is_float(leaf) -> bool:
+    dtype = getattr(leaf, "dtype", None)
+    if dtype is None:
+        dtype = jnp.asarray(leaf).dtype
+    return jnp.issubdtype(dtype, jnp.floating)
+
+
+def transform(params: dict, cfg: ModelConfig, rng=None) -> dict:
+    """fp-initialized params → policy params (traceable: works under
+    jax.eval_shape for the allocation-free dry-run)."""
+    mode = cfg.tuning.mode
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    if mode == "full":
+        return params
+    if mode == "lora":
+        return lora.add_lora(params, rng, cfg.tuning)
+    if mode == "lora_optq":
+        return lora.add_lora(peqa.quantize_params(params, cfg.quant),
+                             rng, cfg.tuning)
+    if mode == "qat":
+        return qat.add_fake_quant(params, cfg.quant)
+    if mode in ("peqa", "peqa_z"):
+        return peqa.quantize_params(params, cfg.quant)
+    raise ValueError(f"unknown tuning mode {mode!r}")
+
+
+def make_mask(params: dict, cfg: ModelConfig) -> dict:
+    """Trainable mask for ALREADY-transformed params (path-based: valid on
+    ShapeDtypeStruct trees too)."""
+    mode = cfg.tuning.mode
+    if mode == "full" or mode == "qat":
+        return _mask(params, lambda p, l: _is_float(l))
+    if mode in ("lora", "lora_optq"):
+        return _mask(params, lambda p, l: "lora" in p)
+    if mode in ("peqa", "peqa_z"):
+        train_zero = mode == "peqa_z" or cfg.tuning.train_zero_points
+
+        def pred(p, l):
+            return p.endswith("/scale") or (train_zero and p.endswith("/zero"))
+
+        return _mask(params, pred)
+    raise ValueError(f"unknown tuning mode {mode!r}")
+
+
+def prepare(params: dict, cfg: ModelConfig, rng=None) -> Tuple[dict, dict]:
+    """fp-initialized params → (policy params, trainable mask)."""
+    params = transform(params, cfg, rng)
+    return params, make_mask(params, cfg)
+
+
+def trainable_count(params: dict, mask: dict) -> int:
+    return sum(int(l.size) for l, m in
+               zip(jax.tree.leaves(params), jax.tree.leaves(mask)) if m)
+
+
+def frozen_count(params: dict, mask: dict) -> int:
+    return sum(int(l.size) for l, m in
+               zip(jax.tree.leaves(params), jax.tree.leaves(mask)) if not m)

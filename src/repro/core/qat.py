@@ -1,0 +1,48 @@
+"""QAT baseline (paper §4.1 upper bound): keep fp weights, learn scales too,
+fake-quantize on the fly with a straight-through estimator.
+
+The params keep "w" and GAIN "scale"/"zero" (initialized by the same RTN
+grid search as PEQA) — ``models/linear.apply`` sees all three and runs the
+STE fake-quant path.  QAT trains everything (w + scales + norms + embeds),
+which is exactly why the paper calls it infeasible at LLM scale.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig
+from repro.core import peqa
+from repro.core.quant import rtn_quantize
+
+
+def add_fake_quant(params: dict, qcfg: QuantConfig) -> dict:
+    """Attach RTN-initialized (scale, zero) beside every eligible 'w'."""
+    spec = qcfg.spec()
+
+    def walk(tree, prefix=""):
+        out = {}
+        for key, val in tree.items():
+            path = f"{prefix}/{key}"
+            if isinstance(val, dict):
+                if "w" in val and not isinstance(val["w"], dict) and \
+                        peqa.eligible(f"{path}/w", val["w"], qcfg):
+                    w = val["w"]
+                    lead = w.shape[:-2]
+                    flat = w.reshape(-1, *w.shape[-2:]).astype(jnp.float32)
+
+                    def one(wi):
+                        _, s, z = rtn_quantize(wi, spec, n_grid=qcfg.n_grid)
+                        return s, z
+
+                    s, z = jax.lax.map(one, flat)
+                    out[key] = dict(val,
+                                    scale=s.reshape(*lead, *s.shape[1:]),
+                                    zero=z.reshape(*lead, *z.shape[1:]))
+                else:
+                    out[key] = walk(val, path)
+            else:
+                out[key] = val
+        return out
+
+    return walk(params)

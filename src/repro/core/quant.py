@@ -1,0 +1,241 @@
+"""Round-to-nearest (RTN) uniform asymmetric quantization — the paper's Eq. (1).
+
+For a weight matrix ``W ∈ R^{n×m}`` (n = output channels, m = input features)
+and bit-width ``b``::
+
+    q  = clamp(round(W / s) + z, 0, 2**b - 1)     # unsigned integer codes
+    W̄  = q - z                                     # the frozen integer matrix
+    Ŵ  = s · W̄                                     # dequantized weights
+
+``s, z`` are per-output-channel (``group_size is None``) or per
+``(channel, group)`` with groups of ``group_size`` consecutive input features
+(Park et al. [49], paper Table 5).  RTN initialization grid-searches a
+shrink factor on the (min, max) range to minimize ``‖W − Ŵ‖_F²`` per group,
+matching the paper's "s0, z0 initialized to minimize the Frobenius error".
+
+Zero-points are kept in float (z is only ever used *subtracted from* q before
+scaling — exactly Eq. (1) — so a float z costs nothing at inference and lets
+the grid search hit the true LSQ optimum).
+
+Packing: sub-4-bit codes are bit-packed into uint32 words along the input
+dimension for storage/kernels — 8×int4 per word, or int3 stored 8-per-word in
+the low 3 bits of nibbles (simple, keeps K-indexing identical to int4; HBM
+stream for the Pallas kernel is what matters and is handled there).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Number of codes packed per uint32 word (both 3- and 4-bit use nibbles; a
+# 3-bit code simply never sets its top nibble bit).
+PACK = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of a quantized tensor layout."""
+
+    bits: int = 4                  # 2..8
+    group_size: Optional[int] = None  # None → per-channel (one group = whole row)
+    symmetric: bool = False        # paper uses asymmetric (zero-points)
+    packed: bool = True            # bit-pack codes into uint32
+    scale_dtype: jnp.dtype = jnp.float32
+
+    @property
+    def levels(self) -> int:
+        return (1 << self.bits) - 1
+
+    @property
+    def packs(self) -> bool:
+        """Nibble packing only holds codes < 16 (bits ≤ 4); wider codes are
+        stored unpacked uint8."""
+        return self.packed and self.bits <= 4
+
+    def n_groups(self, in_features: int) -> int:
+        if self.group_size is None:
+            return 1
+        if in_features % self.group_size:
+            raise ValueError(
+                f"in_features={in_features} not divisible by group_size={self.group_size}"
+            )
+        return in_features // self.group_size
+
+    def validate(self, in_features: int) -> None:
+        if not (2 <= self.bits <= 8):
+            raise ValueError(f"bits must be in [2, 8], got {self.bits}")
+        self.n_groups(in_features)
+        if self.packs and in_features % PACK:
+            raise ValueError(f"packed layout needs in_features % {PACK} == 0")
+
+
+# ---------------------------------------------------------------------------
+# Pack / unpack (bijective on codes in [0, 15])
+# ---------------------------------------------------------------------------
+
+def pack_codes(q: jax.Array) -> jax.Array:
+    """Pack uint codes (…, K) with values < 16 into uint32 (…, K // 8)."""
+    if q.shape[-1] % PACK:
+        raise ValueError(f"last dim {q.shape[-1]} not divisible by {PACK}")
+    q = q.astype(jnp.uint32)
+    q = q.reshape(*q.shape[:-1], q.shape[-1] // PACK, PACK)
+    shifts = jnp.arange(PACK, dtype=jnp.uint32) * 4
+    return jnp.sum(q << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_codes(packed: jax.Array, k: Optional[int] = None) -> jax.Array:
+    """Unpack uint32 (…, K//8) → uint8 codes (…, K)."""
+    shifts = jnp.arange(PACK, dtype=jnp.uint32) * 4
+    q = (packed[..., None] >> shifts) & jnp.uint32(0xF)
+    q = q.reshape(*packed.shape[:-1], packed.shape[-1] * PACK)
+    if k is not None:
+        q = q[..., :k]
+    return q.astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# RTN quantization
+# ---------------------------------------------------------------------------
+
+def _grouped(w: jax.Array, spec: QuantSpec) -> jax.Array:
+    """(n, m) → (n, G, m/G) view."""
+    n, m = w.shape
+    g = spec.n_groups(m)
+    return w.reshape(n, g, m // g)
+
+
+def _rtn_params_for_range(wg, lo, hi, spec: QuantSpec):
+    """Given per-group (lo, hi), produce (scale, zero) for asymmetric quant."""
+    levels = spec.levels
+    if spec.symmetric:
+        amax = jnp.maximum(jnp.abs(lo), jnp.abs(hi))
+        scale = jnp.maximum(amax / ((levels - 1) / 2), 1e-12)
+        zero = jnp.full_like(scale, (levels + 1) / 2)  # midpoint code
+    else:
+        scale = jnp.maximum((hi - lo) / levels, 1e-12)
+        zero = -lo / scale  # float zero-point (code of real value 0… of lo)
+    return scale, zero
+
+
+def _quantize_with(wg, scale, zero, spec: QuantSpec):
+    q = jnp.clip(jnp.round(wg / scale[..., None] + zero[..., None]), 0, spec.levels)
+    return q
+
+
+def rtn_quantize(
+    w: jax.Array,
+    spec: QuantSpec,
+    *,
+    n_grid: int = 20,
+    max_shrink: float = 0.45,
+):
+    """RTN with per-group range grid-search (minimize per-group Frobenius err).
+
+    Returns (q_codes uint8 (n, m), scale (n, G), zero (n, G)).
+    ``n_grid=1`` disables the search (plain min/max RTN).
+    """
+    w = w.astype(jnp.float32)
+    wg = _grouped(w, spec)
+    lo = jnp.minimum(wg.min(axis=-1), 0.0)
+    hi = jnp.maximum(wg.max(axis=-1), 0.0)
+
+    def err_for(shrink):
+        s, z = _rtn_params_for_range(wg, lo * shrink, hi * shrink, spec)
+        q = _quantize_with(wg, s, z, spec)
+        deq = s[..., None] * (q - z[..., None])
+        return jnp.sum((deq - wg) ** 2, axis=-1), s, z
+
+    if n_grid <= 1:
+        _, scale, zero = err_for(1.0)
+    else:
+        shrinks = jnp.linspace(1.0, 1.0 - max_shrink, n_grid)
+
+        def body(carry, shrink):
+            best_err, best_s, best_z = carry
+            e, s, z = err_for(shrink)
+            take = e < best_err
+            return (
+                jnp.where(take, e, best_err),
+                jnp.where(take, s, best_s),
+                jnp.where(take, z, best_z),
+            ), None
+
+        e0, s0, z0 = err_for(1.0)
+        (_, scale, zero), _ = jax.lax.scan(body, (e0, s0, z0), shrinks[1:])
+
+    q = _quantize_with(wg, scale, zero, spec).reshape(w.shape).astype(jnp.uint8)
+    return q, scale.astype(spec.scale_dtype), zero.astype(spec.scale_dtype)
+
+
+def dequantize(
+    q: jax.Array,
+    scale: jax.Array,
+    zero: jax.Array,
+    spec: QuantSpec,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Ŵ = s · (q − z), per Eq. (1)/(2). q: (n, m) codes; scale/zero: (n, G)."""
+    n, m = q.shape
+    g = scale.shape[-1]
+    qg = q.reshape(n, g, m // g).astype(jnp.float32)
+    deq = scale[..., None].astype(jnp.float32) * (qg - zero[..., None].astype(jnp.float32))
+    return deq.reshape(n, m).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# QTensor — the stored form of one quantized parameter
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """Frozen integer weight + (trainable) scale + frozen zero-point.
+
+    ``qw`` is uint32-packed (n, m/8) when ``spec.packed`` else uint8 (n, m).
+    ``scale``/``zero`` are (n, G).  ``shape`` is the logical (n, m).
+    """
+
+    qw: jax.Array
+    scale: jax.Array
+    zero: jax.Array
+    shape: tuple  # static
+    spec: QuantSpec  # static
+
+    def tree_flatten(self):
+        return (self.qw, self.scale, self.zero), (self.shape, self.spec)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    @property
+    def codes(self) -> jax.Array:
+        if self.spec.packs:
+            return unpack_codes(self.qw, self.shape[-1])
+        return self.qw
+
+    def dequantize(self, dtype=jnp.bfloat16) -> jax.Array:
+        return dequantize(self.codes, self.scale, self.zero, self.spec, dtype)
+
+    @classmethod
+    def quantize(cls, w: jax.Array, spec: QuantSpec, *, n_grid: int = 20) -> "QTensor":
+        spec.validate(w.shape[-1])
+        q, s, z = rtn_quantize(w, spec, n_grid=n_grid)
+        qw = pack_codes(q) if spec.packs else q
+        return cls(qw=qw, scale=s, zero=z, shape=tuple(w.shape), spec=spec)
+
+    def nbytes_ideal(self) -> int:
+        """Deployed size in bytes: b-bit codes + scales + zeros."""
+        n, m = self.shape
+        code_bits = n * m * self.spec.bits
+        meta = self.scale.size + self.zero.size
+        return code_bits // 8 + meta * np.dtype(np.float16).itemsize
+
+
+def quant_error(w: jax.Array, qt: QTensor) -> jax.Array:
+    return jnp.sqrt(jnp.mean((qt.dequantize(jnp.float32) - w.astype(jnp.float32)) ** 2))

@@ -1,0 +1,80 @@
+"""ScaleBank — the paper's task-switching story made concrete.
+
+One frozen integer backbone, N tasks, each task = {path: scale array}
+(plus zero-points for the peqa_z ablation).  Swapping tasks is an O(MBs)
+pytree update — benchmarks/kernel_bench.py measures it vs full-model reload,
+and train/serve.py uses it to serve multiple PEQA-tuned tasks from one
+backbone in the same batch-serving process.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+SCALE_KEYS = ("scale", "zero")
+
+
+def _path_str(kp) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+
+
+def extract_scales(params: dict, include_zero: bool = False) -> Dict[str, np.ndarray]:
+    """Pull every quantization scale (the task-specific parameters)."""
+    keys = SCALE_KEYS if include_zero else ("scale",)
+    out = {}
+
+    def visit(kp, leaf):
+        path = _path_str(kp)
+        if path.split("/")[-1] in keys and "qw_sibling" not in path:
+            out[path] = np.asarray(leaf)
+    jax.tree_util.tree_map_with_path(visit, params)
+    return out
+
+
+def apply_scales(params: dict, scales: Dict[str, np.ndarray]) -> dict:
+    """Install a task's scales into the (shared-backbone) param tree."""
+    def replace(kp, leaf):
+        path = _path_str(kp)
+        if path in scales:
+            new = jnp.asarray(scales[path], dtype=jnp.asarray(leaf).dtype)
+            if new.shape != leaf.shape:
+                raise ValueError(f"scale shape mismatch at {path}: "
+                                 f"{new.shape} vs {leaf.shape}")
+            return new
+        return leaf
+    return jax.tree_util.tree_map_with_path(replace, params)
+
+
+class ScaleBank:
+    """In-memory + on-disk store of per-task scale sets."""
+
+    def __init__(self, root: str | None = None):
+        self.root = root
+        self.tasks: Dict[str, Dict[str, np.ndarray]] = {}
+        if root:
+            os.makedirs(root, exist_ok=True)
+            for f in os.listdir(root):
+                if f.endswith(".npz"):
+                    self.tasks[f[:-4]] = dict(np.load(os.path.join(root, f)))
+
+    def add(self, name: str, params: dict, include_zero: bool = False):
+        scales = extract_scales(params, include_zero)
+        self.tasks[name] = scales
+        if self.root:
+            np.savez(os.path.join(self.root, f"{name}.npz"), **scales)
+
+    def switch(self, params: dict, name: str) -> dict:
+        if name not in self.tasks:
+            raise KeyError(f"no task {name!r}; have {list(self.tasks)}")
+        return apply_scales(params, self.tasks[name])
+
+    def nbytes(self, name: str) -> int:
+        return sum(a.nbytes for a in self.tasks[name].values())
+
+    def names(self) -> Iterable[str]:
+        return self.tasks.keys()

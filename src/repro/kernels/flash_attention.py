@@ -1,0 +1,132 @@
+"""Pallas TPU flash-attention forward kernel.
+
+The §Perf analysis (EXPERIMENTS.md B2/A2) showed the XLA chunked-attention
+path still streams per-block logits through HBM at fusion boundaries; this
+kernel is the VMEM-resident version the TPU deserves: one (q-block, head)
+program keeps the accumulator, running max and normalizer in VMEM scratch
+while looping over key blocks on the grid's innermost dimension — nothing
+S×S (or even S×block) ever leaves VMEM.
+
+Layout: q (B, H, Sq, D), k/v (B, H, Sk, D) — callers repeat GQA kv heads
+(ops.attention handles that; the repeat is free under XLA CSE on TPU).
+Causal + sliding-window masks are applied from absolute positions, so the
+same kernel serves training (offset None → Sk − Sq) and cached decode
+(offset = pos).  Backward runs through kernels/chunked_attention.py's
+flash-style custom VJP (this kernel is the forward drop-in).
+
+Validated in interpret mode against ref.flash_attention_ref
+(tests/test_kernels.py::test_flash_pallas_*).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+               *, scale: float, causal: bool, window, offset: int,
+               n_kb: int, block_q: int, block_k: int):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    logits = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)           # (bq, bk)
+
+    i_abs = qb * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + offset
+    j_abs = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), bool)
+    if causal:
+        mask &= j_abs <= i_abs
+    if window is not None:
+        mask &= j_abs > i_abs - window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, logits.max(-1))
+    p = jnp.exp(logits - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kb == n_kb - 1)
+    def _store():
+        l_safe = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "offset",
+                     "block_q", "block_k", "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,           # (B, H, Sq, D)
+    k: jax.Array,           # (B, H, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window=None,
+    scale=None,
+    offset=None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    offset = offset if offset is not None else sk - sq
+    bq = min(block_q, sq)
+    while sq % bq:
+        bq -= 1
+    bk = min(block_k, sk)
+    while sk % bk:
+        bk -= 1
+    n_kb = sk // bk
+    grid = (b * h, sq // bq, n_kb)
+
+    qr = q.reshape(b * h, sq, d)
+    kr = k.reshape(b * h, sk, d)
+    vr = v.reshape(b * h, sk, d)
+    out = pl.pallas_call(
+        functools.partial(
+            _fa_kernel, scale=scale, causal=causal, window=window,
+            offset=offset, n_kb=n_kb, block_q=bq, block_k=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qb, kb: (bh, qb, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qb, kb: (bh, kb, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qb, kb: (bh, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qb, kb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,193 @@
+"""Public kernel ops: backend dispatch + custom VJP.
+
+``quant_matmul`` is the single entry point models use for every quantized
+fully-connected layer.  Forward picks an implementation:
+
+  * ``pallas``   — the fused dequant-matmul TPU kernel (quant_matmul.py)
+  * ``interpret``— same kernel, interpret mode (CPU correctness testing)
+  * ``xla``      — dequantize to activation dtype + einsum; XLA fuses the
+                   (convert → sub → mul) chain into the dot operand.  This is
+                   the dry-run / CPU path.
+
+Backward is analytic and implementation-independent (the paper's Eq. (2)
+gradient): with  y = x·Ŵᵀ,  Ŵ = s·(q − z),
+
+    dx         = dy · Ŵ
+    ds[n, g]   = Σ_{k∈g} (dyᵀx)[n, k] · (q − z)[n, k]
+    dz[n, g]   = −s[n, g] · Σ_{k∈g} (dyᵀx)[n, k]      (Table 17 ablation only)
+
+The integer codes get no gradient — they are frozen by construction, which is
+the heart of PEQA (the optimizer additionally masks everything non-scale).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import PACK, QuantSpec, unpack_codes
+from repro.kernels import ref as _ref
+
+_tls = threading.local()
+
+
+@contextlib.contextmanager
+def force_impl(impl: str):
+    """Override the quant-matmul implementation within a scope.
+
+    Used by MoE blocks: inside jax.shard_map a custom_vjp cannot express the
+    varying-manual-axes bookkeeping for replicated scale params, so those
+    regions run the 'autodiff' impl (plain expression — JAX's transpose
+    machinery inserts the correct psums for invariant inputs)."""
+    prev = getattr(_tls, "impl", None)
+    _tls.impl = impl
+    try:
+        yield
+    finally:
+        _tls.impl = prev
+
+
+def default_impl() -> str:
+    forced = getattr(_tls, "impl", None)
+    if forced:
+        return forced
+    env = os.environ.get("REPRO_QMM_IMPL")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _codes_f32(qw, k, spec: QuantSpec):
+    codes = unpack_codes(qw, k) if spec.packs else qw
+    return codes.astype(jnp.float32)
+
+
+def _dequant(qw, scale, zero, k, spec: QuantSpec, dtype):
+    n = qw.shape[0]
+    g = scale.shape[-1]
+    codes = _codes_f32(qw, k, spec).reshape(n, g, k // g)
+    w = scale.astype(jnp.float32)[..., None] * (codes - zero.astype(jnp.float32)[..., None])
+    return w.reshape(n, k).astype(dtype)
+
+
+def _qmm_fwd_impl(x2d, qw, scale, zero, spec: QuantSpec, impl: str,
+                  bf16_reduce: bool = False):
+    k = x2d.shape[-1]
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.quant_matmul import quant_matmul_pallas
+
+        return quant_matmul_pallas(
+            x2d, qw, scale.astype(jnp.float32), zero.astype(jnp.float32),
+            spec=spec, interpret=(impl == "interpret"),
+        )
+    if impl == "ref":
+        n = qw.shape[0]
+        return _ref.quant_matmul_ref(x2d, qw, scale, zero, (n, k), spec)
+    # xla fast path: dequant in activation dtype, let XLA fuse into the dot
+    w = _dequant(qw, scale, zero, k, spec, x2d.dtype)
+    return jax.lax.dot_general(
+        x2d, w, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=None if bf16_reduce else jnp.float32,
+    ).astype(x2d.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _qmm(x2d, qw, scale, zero, spec: QuantSpec, impl: str, bf16_reduce: bool):
+    return _qmm_fwd_impl(x2d, qw, scale, zero, spec, impl, bf16_reduce)
+
+
+def _qmm_fwd(x2d, qw, scale, zero, spec, impl, bf16_reduce):
+    y = _qmm_fwd_impl(x2d, qw, scale, zero, spec, impl, bf16_reduce)
+    return y, (x2d, qw, scale, zero)
+
+
+def _qmm_bwd(spec, impl, bf16_reduce, res, dy):
+    x2d, qw, scale, zero = res
+    k = x2d.shape[-1]
+    n = qw.shape[0]
+    g = scale.shape[-1]
+    w = _dequant(qw, scale, zero, k, spec, x2d.dtype)          # (N, K)
+    dx = jax.lax.dot_general(                                   # dy @ W
+        dy, w, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x2d.dtype)
+    # c = dyᵀ x  (N, K) in f32
+    c = jax.lax.dot_general(
+        dy.astype(jnp.float32), x2d.astype(jnp.float32),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    codes = _codes_f32(qw, k, spec).reshape(n, g, k // g)
+    cg = c.reshape(n, g, k // g)
+    zf = zero.astype(jnp.float32)[..., None]
+    ds = jnp.sum(cg * (codes - zf), axis=-1).astype(scale.dtype)
+    dz = (-scale.astype(jnp.float32) * jnp.sum(cg, axis=-1)).astype(zero.dtype)
+    return dx, None, ds, dz
+
+
+_qmm.defvjp(_qmm_fwd, _qmm_bwd)
+
+
+def quant_matmul(
+    x: jax.Array,
+    qw: jax.Array,
+    scale: jax.Array,
+    zero: jax.Array,
+    spec: QuantSpec,
+    *,
+    impl: Optional[str] = None,
+    bf16_reduce: bool = False,
+) -> jax.Array:
+    """y = x @ Ŵᵀ for arbitrary leading batch dims on x.  Differentiable in
+    (x, scale, zero); integer codes are frozen."""
+    impl = impl or default_impl()
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2d = x.reshape(-1, k)
+    if impl == "autodiff":
+        # plain expression: autodiff handles scale/zero grads; codes frozen
+        w = _dequant(qw, scale, zero, k, spec, x2d.dtype)
+        y = jax.lax.dot_general(
+            x2d, w, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=None if bf16_reduce else jnp.float32,
+        ).astype(x2d.dtype)
+    else:
+        y = _qmm(x2d, qw, scale, zero, spec, impl, bf16_reduce)
+    return y.reshape(*lead, y.shape[-1])
+
+
+def dequantize_op(qw, scale, zero, out_features_k: int, spec: QuantSpec,
+                  dtype=jnp.bfloat16):
+    """Materialize Ŵ (for export / QAT comparisons)."""
+    return _dequant(qw, scale, zero, out_features_k, spec, dtype)
+
+
+def rtn_pack(w: jax.Array, spec: QuantSpec, *, impl: Optional[str] = None):
+    """Fused quantize+pack (min/max RTN). Falls back to jnp off-TPU."""
+    impl = impl or default_impl()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.rtn_pack import rtn_pack_pallas
+
+        return rtn_pack_pallas(w, spec=spec, interpret=(impl == "interpret"))
+    return _ref.rtn_pack_ref(w, spec, n_grid=1)
+
+
+def attention(q, k, v, *, causal=True, window=None, scale=None, offset=None,
+              impl: str = "dense"):
+    """Attention entry point (GQA/SWA-aware).
+
+    impl='dense'  — materialized-logits XLA path (baseline)
+    impl='chunked'— online-softmax scan over key blocks + flash-style
+                    custom-VJP backward (§Perf: removes the S² HBM term);
+                    the Pallas flash kernel slots in here on TPU."""
+    if impl == "chunked":
+        from repro.kernels.chunked_attention import chunked_attention
+
+        return chunked_attention(q, k, v, causal, window, scale, offset)
+    return _ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                    scale=scale, offset=offset)

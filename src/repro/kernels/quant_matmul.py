@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: fused sub-4-bit dequant + matmul (W{3,4}A16 GEMM/GEMV).
+
+This is the paper's deployment-side win (§3.3): weight-only-quantized LLM
+layers are memory-bound at generation time; streaming b-bit codes instead of
+16-bit weights cuts HBM traffic ~16/b×.  GPU implementations (OPTQ, AWQ,
+LUT-GEMM) use CUDA GEMV kernels; the TPU-native adaptation is:
+
+  HBM → VMEM : packed uint32 code blocks (bn, bk/8) + per-group scales/zeros
+  VMEM → VREG: unpack nibbles with vector shifts/ands on the 8×128 VPU
+  VREG → MXU : dequantized bf16 tile (bn, bk) feeds the 128×128 systolic MXU
+
+LUT-GEMM's warp-shuffle LUT broadcast has no TPU analogue — plain
+unpack+scale on the VPU is the idiomatic equivalent (DESIGN.md §3).
+
+Grid: (M/bm, N/bn, K/bk), K innermost; f32 accumulator lives in a VMEM
+scratch across the K loop.  Per-group scales are applied per K-block, so
+``block_k % group_size == 0`` is required (checked in ops.py).
+
+3-bit weights use the same nibble layout (top bit of each nibble unused) —
+the HBM stream is then 4 bits/weight; true 3-bit packing is a storage-side
+concern handled analytically for the paper's model-size tables (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import PACK, QuantSpec
+
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 512
+
+
+def _unpack_nibbles(words: jax.Array, bk: int) -> jax.Array:
+    """uint32 (bn, bk/8) → float32 codes (bn, bk)."""
+    shifts = jnp.arange(PACK, dtype=jnp.uint32) * 4
+    codes = (words[..., None] >> shifts) & jnp.uint32(0xF)
+    return codes.reshape(words.shape[0], bk).astype(jnp.float32)
+
+
+def _qmm_kernel(x_ref, qw_ref, scale_ref, zero_ref, o_ref, acc_ref,
+                *, n_k: int, bk: int, groups_per_blk: int, out_dtype):
+    """One (bm, bn) output tile; K-loop via grid dim 2 (innermost)."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                  # (bm, bk)   bf16/f32
+    codes = _unpack_nibbles(qw_ref[...], bk)        # (bn, bk)   f32
+    scale = scale_ref[...]                          # (bn, G_blk) f32
+    zero = zero_ref[...]                            # (bn, G_blk) f32
+    bn = codes.shape[0]
+    # dequantize per group: groups are contiguous runs of bk/G_blk columns
+    cg = codes.reshape(bn, groups_per_blk, bk // groups_per_blk)
+    w = (scale[..., None] * (cg - zero[..., None])).reshape(bn, bk)
+    acc_ref[...] += jax.lax.dot_general(
+        x.astype(jnp.float32), w,
+        dimension_numbers=(((1,), (1,)), ((), ())),  # x @ w.T
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k_idx == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def quant_matmul_pallas(
+    x: jax.Array,           # (M, K)
+    qw: jax.Array,          # (N, K // 8) uint32 packed codes
+    scale: jax.Array,       # (N, G) f32
+    zero: jax.Array,        # (N, G) f32
+    *,
+    spec: QuantSpec,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = x @ Ŵᵀ with Ŵ = scale · (codes − zero);  returns (M, N)."""
+    m, k = x.shape
+    n = qw.shape[0]
+    g = scale.shape[-1]
+    group = k // g
+    out_dtype = out_dtype or x.dtype
+
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+    # keep K blocks group- and pack-aligned
+    bk = max((bk // max(group, PACK)) * max(group, PACK), max(group, PACK)) \
+        if group <= bk else k
+    if k % bk:
+        bk = k  # fall back to single K block for awkward shapes
+    groups_per_blk = bk // group
+    n_k = k // bk
+
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), n_k)
+
+    return pl.pallas_call(
+        functools.partial(
+            _qmm_kernel, n_k=n_k, bk=bk,
+            groups_per_blk=groups_per_blk, out_dtype=out_dtype,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk // PACK), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, groups_per_blk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, groups_per_blk), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, qw, scale, zero)

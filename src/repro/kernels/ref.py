@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the kernel sweep tests AND the path the CPU
+dry-run compiles (Pallas lowers only for TPU/GPU; see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantSpec, unpack_codes
+
+
+def dequant_ref(qw, scale, zero, shape, spec: QuantSpec, dtype=jnp.bfloat16):
+    """Ŵ = s·(q−z) from (possibly packed) codes. shape = logical (n, m)."""
+    n, m = shape
+    codes = unpack_codes(qw, m) if spec.packs else qw
+    g = scale.shape[-1]
+    qg = codes.reshape(n, g, m // g).astype(jnp.float32)
+    w = scale[..., None].astype(jnp.float32) * (qg - zero[..., None].astype(jnp.float32))
+    return w.reshape(n, m).astype(dtype)
+
+
+def quant_matmul_ref(x, qw, scale, zero, shape, spec: QuantSpec, out_dtype=None):
+    """y = x @ Ŵᵀ ;  x: (..., K), Ŵ: (N, K) stored as codes; → (..., N)."""
+    out_dtype = out_dtype or x.dtype
+    w = dequant_ref(qw, scale, zero, shape, spec, jnp.float32)
+    y = jnp.einsum("...k,nk->...n", x.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32)
+    return y.astype(out_dtype)
+
+
+def rtn_pack_ref(w, spec: QuantSpec, n_grid: int = 20):
+    """Oracle for the fused RTN quantize+pack kernel = core.quant.rtn_quantize."""
+    from repro.core.quant import pack_codes, rtn_quantize
+
+    q, s, z = rtn_quantize(w, spec, n_grid=n_grid)
+    return (pack_codes(q) if spec.packs else q), s, z
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                        scale: float | None = None, offset=None):
+    """Reference (GQA-aware) attention.
+
+    q: (B, Sq, Hq, D), k/v: (B, Sk, Hkv, D). Hq % Hkv == 0.
+    window: sliding-window size (Mistral/Mixtral SWA) — key j visible to
+    query i iff i - window < j <= i (causal).
+    offset: absolute position of query 0; key slot j is at absolute position
+    j.  Defaults to Sk - Sq (training / prefill: ends aligned).  Decode with
+    a KV cache passes offset = pos so unwritten slots (> pos) are masked.
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    rep = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # (B, Hkv, rep, Sq, Sk)
+    logits = jnp.einsum("bqhrd,bkhd->bhrqk", qf.reshape(b, sq, hkv, rep, d), kf)
+    if offset is None:
+        offset = sk - sq
+    iq = jnp.arange(sq)[:, None] + offset
+    jk = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= jk <= iq
+    if window is not None:
+        mask &= jk > iq - window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", p, vf)
+    return out.reshape(b, sq, hq, d).astype(q.dtype)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: fused RTN quantize + nibble-pack.
+
+Used at model-conversion time (fp16 checkpoint → PEQA backbone) and by the
+int8 gradient-compression path.  One pass per (bn, bk) block: per-group
+min/max → (scale, zero) → round/clamp → pack 8 codes/uint32 — the quantized
+codes never round-trip through HBM in fp32.
+
+Blocks are group-aligned (``block_k % group_size == 0``) so every group is
+fully contained in one block and the reduction is block-local.  Per-channel
+mode (group_size = K) uses a single K block per row — fine for d_model-sized
+rows; wrappers fall back to the jnp reference for degenerate shapes.
+
+The grid-searched range shrink of ``core.quant.rtn_quantize`` (offline init)
+is intentionally NOT in the kernel: the kernel is the high-throughput path
+(plain min/max RTN, ``n_grid=1``); calibration runs once, offline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quant import PACK, QuantSpec
+
+DEFAULT_BLOCK_N = 64
+
+
+def _rtn_pack_kernel(w_ref, qw_ref, scale_ref, zero_ref,
+                     *, levels: int, group: int):
+    w = w_ref[...].astype(jnp.float32)              # (bn, bk)
+    bn, bk = w.shape
+    g_blk = bk // group
+    wg = w.reshape(bn, g_blk, group)
+    lo = jnp.minimum(wg.min(axis=-1), 0.0)
+    hi = jnp.maximum(wg.max(axis=-1), 0.0)
+    scale = jnp.maximum((hi - lo) / levels, 1e-12)  # (bn, g_blk)
+    zero = -lo / scale
+    q = jnp.clip(jnp.round(wg / scale[..., None] + zero[..., None]), 0, levels)
+    q = q.reshape(bn, bk // PACK, PACK).astype(jnp.uint32)
+    shifts = jnp.arange(PACK, dtype=jnp.uint32) * 4
+    qw_ref[...] = jnp.sum(q << shifts, axis=-1, dtype=jnp.uint32)
+    scale_ref[...] = scale
+    zero_ref[...] = zero
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "block_n", "block_k", "interpret")
+)
+def rtn_pack_pallas(
+    w: jax.Array,                # (N, K) float
+    *,
+    spec: QuantSpec,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int | None = None,
+    interpret: bool = False,
+):
+    """Returns (qw uint32 (N, K/8), scale (N, G), zero (N, G)) — min/max RTN."""
+    n, k = w.shape
+    group = spec.group_size or k
+    bk = block_k or min(max(group, 2048), k)
+    bk = (bk // group) * group
+    if k % bk:
+        bk = k
+    bn = min(block_n, n)
+    g_blk = bk // group
+
+    grid = (pl.cdiv(n, bn), k // bk)
+    qw, scale, zero = pl.pallas_call(
+        functools.partial(_rtn_pack_kernel, levels=spec.levels, group=group),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn, bk), lambda i, kk: (i, kk))],
+        out_specs=[
+            pl.BlockSpec((bn, bk // PACK), lambda i, kk: (i, kk)),
+            pl.BlockSpec((bn, g_blk), lambda i, kk: (i, kk)),
+            pl.BlockSpec((bn, g_blk), lambda i, kk: (i, kk)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k // PACK), jnp.uint32),
+            jax.ShapeDtypeStruct((n, k // group), jnp.float32),
+            jax.ShapeDtypeStruct((n, k // group), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w)
+    return qw, scale, zero

@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede every other import (jax locks the device
+# count at first init).  Everything below is ordinary code.
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape train_4k [--multi-pod] [--all] [--out results_dir]
+
+Compilation success here proves the distribution config is coherent: every
+sharding divides, every collective lowers, per-device memory fits.  Results
+are cached as JSON per cell (resumable); launch/roofline.py consumes them.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import ModelConfig, ShapeConfig, TuningConfig
+from repro.core import policies
+from repro.dist import context as dctx
+from repro.dist import sharding as shard_rules
+from repro.launch.hlo_stats import collective_stats
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.optim.adamw import make_optimizer
+from repro.train import step as step_mod
+from repro.train.state import state_specs
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _batch_specs_tree(ctx, batch, batch_sharded: bool):
+    def spec(l):
+        if jnp.ndim(l) == 0:
+            return P()
+        return P(ctx.data_axes if batch_sharded else None,
+                 *([None] * (jnp.ndim(l) - 1)))
+    return jax.tree.map(spec, batch)
+
+
+def _cache_specs_tree(ctx, cache, batch: int, batch_sharded: bool,
+                      n_kv_heads: int = 0):
+    """KV caches / SSM states: shard the batch dim over the data axes where
+    it divides, AND the kv-head dim over 'model' where it divides 16 —
+    without the latter a 500k-context cache replicates over the model axis
+    and cannot fit HBM (batch=1 gives the data axes nothing to shard).
+
+    Cache layouts are stacked over layers/groups with the batch dim at
+    varying depth per family (attn: (L,B,C,H,D); zamba ssm: (G,every,B,…));
+    the batch dim is the FIRST dim whose extent equals the global batch —
+    unambiguous for the assigned shapes (batch ∈ {256,128,32,1} never
+    collides with layer-stack extents)."""
+    msize = dict(zip(ctx.mesh.axis_names,
+                     ctx.mesh.devices.shape))[ctx.model_axis]
+
+    def spec(l):
+        nd = jnp.ndim(l)
+        parts = [None] * nd
+        placed_batch = False
+        for dim in range(nd):
+            if batch_sharded and not placed_batch and l.shape[dim] == batch:
+                parts[dim] = ctx.data_axes
+                placed_batch = True
+            elif (n_kv_heads and dim >= 2 and l.shape[dim] == n_kv_heads
+                  and n_kv_heads % msize == 0
+                  and ctx.model_axis not in parts):
+                parts[dim] = ctx.model_axis
+        # kv-heads not 16-divisible (GQA kv in {1,4,8}): shard head_dim
+        # instead — attention contracts over D, GSPMD psums the partials
+        if ctx.model_axis not in parts and nd >= 3 \
+                and l.shape[-1] % msize == 0:
+            parts[-1] = ctx.model_axis
+        return P(*parts)
+    return jax.tree.map(spec, cache)
+
+
+def apply_variant(cfg, variant: str):
+    """'+'-joined §Perf levers (EXPERIMENTS.md):
+    bf16r    — bf16 dot outputs / TP collectives (A1)
+    chunked  — online-softmax attention, no S² HBM traffic (A2)
+    kv8      — int8 KV cache, f16 per-(token,head) scales (C1)
+    padheads — pad n_heads to a multiple of 16 so attention shards without
+               regathers (B1; zero-padded heads are mathematically inert)
+    """
+    for tok in [t for t in variant.split("+") if t]:
+        if tok == "bf16r":
+            cfg = cfg.replace(bf16_reduce=True)
+        elif tok == "chunked":
+            cfg = cfg.replace(attn_impl="chunked")
+        elif tok == "kv8":
+            cfg = cfg.replace(kv_cache_dtype="int8")
+        elif tok == "padheads":
+            padded = -(-cfg.n_heads // 16) * 16
+            cfg = cfg.replace(n_heads=padded, head_dim=cfg.d_head)
+        elif tok == "rematdots":
+            cfg = cfg.replace(remat="dots")
+        elif tok == "blockcon":
+            cfg = cfg.replace(constrain_block_outputs=True)
+        elif tok == "logitshard":
+            pass  # handled at jit boundary (decode out_shardings)
+        else:
+            raise ValueError(f"unknown variant token {tok!r}")
+    return cfg
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                tuning_mode: str = "peqa", seq_shard: bool = True,
+                remat: str = "block", variant: str = "") -> dict:
+    """Lower + compile one cell; returns the analysis record."""
+    shape = configs.SHAPES_BY_NAME[shape_name]
+    cfg = configs.get_config(arch).replace(
+        tuning=TuningConfig(mode=tuning_mode), seq_shard=seq_shard,
+        remat=remat)
+    cfg = apply_variant(cfg, variant)
+    api = registry.build(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = dctx.make_ctx(mesh)
+    n_dev = mesh.devices.size
+
+    rng = jax.random.PRNGKey(0)
+    t0 = time.time()
+    # abstract params/state — no allocation anywhere
+    aparams = _abstract(lambda: policies.transform(api.init(rng), cfg, rng))
+    mask = policies.make_mask(aparams, cfg)
+    record = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+              "multi_pod": multi_pod, "devices": n_dev, "variant": variant,
+              "tuning": tuning_mode, "seq_shard": seq_shard, "remat": remat}
+
+    problems = shard_rules.validate_for_mesh(aparams, mesh)
+    if problems:
+        record["sharding_problems"] = problems[:20]
+
+    pspecs = shard_rules.param_specs(aparams)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    batch = api.input_specs(shape)
+    batch_sharded = shape.global_batch % int(
+        np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                 for a in ctx.data_axes])) == 0
+
+    with dctx.use_mesh(ctx):
+        if shape.kind == "train":
+            tcfg = configs.TrainConfig()
+            opt = make_optimizer(tcfg.optim, tcfg.steps)
+            astate = {"params": aparams,
+                      "opt": jax.eval_shape(lambda p: opt.init(p, mask), aparams),
+                      "step": jax.ShapeDtypeStruct((), jnp.int32)}
+            ts = step_mod.build_train_step(api, cfg, tcfg, mask, opt,
+                                           mesh=mesh, state_example=astate,
+                                           batch_example=batch)
+            lowered = ts.lower(astate, batch)
+        elif shape.kind == "prefill":
+            bspec = _batch_specs_tree(ctx, batch, batch_sharded)
+            to_ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                           is_leaf=lambda x: isinstance(x, P))
+            fn = jax.jit(api.prefill, in_shardings=(pshard, to_ns(bspec)))
+            lowered = fn.lower(aparams, batch)
+        else:  # decode
+            acache = jax.eval_shape(
+                lambda: api.init_cache(shape.global_batch, shape.seq_len))
+            cspec = _cache_specs_tree(ctx, acache, shape.global_batch,
+                                      batch_sharded,
+                                      n_kv_heads=cfg.n_kv_heads)
+            to_ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                           is_leaf=lambda x: isinstance(x, P))
+            tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            tok_spec = NamedSharding(
+                mesh, P(ctx.data_axes if batch_sharded else None, None))
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            out_shardings = None
+            if "logitshard" in variant:
+                # keep logits vocab-sharded on the way out: the sampler is
+                # shard-local (local argmax + scalar max-reduce), so the
+                # full-logits all-gather is pure waste (§Perf lever C2)
+                logits_spec = NamedSharding(
+                    mesh, P(ctx.data_axes if batch_sharded else None, "model"))
+                out_shardings = (logits_spec, to_ns(cspec))
+            fn = jax.jit(
+                api.decode_step,
+                in_shardings=(pshard, to_ns(cspec), tok_spec,
+                              NamedSharding(mesh, P())),
+                out_shardings=out_shardings,
+                donate_argnums=(1,))
+            lowered = fn.lower(aparams, acache, tok, pos)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    from repro.launch import hlo_stats
+    hlo = hlo_stats.analyze(compiled.as_text())
+    record.update(
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        # raw XLA numbers (loop bodies counted once — see hlo_stats.py)
+        flops=float(cost.get("flops", -1.0)),
+        bytes_accessed=float(cost.get("bytes accessed", -1.0)),
+        # loop-aware per-device aggregates (roofline inputs)
+        dot_flops=hlo["dot_flops"],
+        hbm_bytes=hlo["hbm_bytes"],
+        hbm_bytes_raw=hlo.get("hbm_bytes_raw"),
+        while_trips=hlo["while_trips"],
+        memory=dict(
+            argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+            output_bytes=getattr(mem, "output_size_in_bytes", None),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+            peak_bytes=getattr(mem, "peak_memory_in_bytes", None),
+        ),
+        collectives=hlo["collectives"],
+    )
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--tuning", default="peqa")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--remat", default="block")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = configs.all_cells() if args.all else [
+        (args.arch, configs.SHAPES_BY_NAME[args.shape])]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    for arch, shape in cells:
+        sname = shape.name if isinstance(shape, ShapeConfig) else shape
+        for mp in meshes:
+            tagp = f"-{args.tag}" if args.tag else ""
+            if args.variant:
+                tagp = f"-{args.variant.replace('+', '_')}" + tagp
+            key = f"{arch}__{sname}__{'pod2' if mp else 'pod1'}{tagp}"
+            path = os.path.join(args.out, key + ".json")
+            if os.path.exists(path):
+                print(f"[dryrun] {key}: cached")
+                continue
+            print(f"[dryrun] {key}: lowering…", flush=True)
+            try:
+                rec = dryrun_cell(arch, sname, multi_pod=mp,
+                                  tuning_mode=args.tuning,
+                                  seq_shard=not args.no_seq_shard,
+                                  remat=args.remat, variant=args.variant)
+                rec["ok"] = True
+            except Exception as e:  # noqa: BLE001 — record and continue
+                rec = {"arch": arch, "shape": sname, "multi_pod": mp,
+                       "ok": False, "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-4000:]}
+                print(f"[dryrun] {key}: FAILED {rec['error']}", flush=True)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            if rec.get("ok"):
+                print(f"[dryrun] {key}: ok  compile={rec['compile_s']}s "
+                      f"flops={rec['flops']:.3g} "
+                      f"coll={rec['collectives']['total_bytes']:.3g}B",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,365 @@
+"""Compiled-HLO analysis for the roofline (§Roofline).
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (scan-over-layers
+would be undercounted ~L×), and has no collective-bytes entry at all.  This
+module parses the optimized HLO text into its computation call graph and
+aggregates, multiplying loop bodies by their trip count (recovered from the
+loop-bound constant in each while's condition computation):
+
+  * dot FLOPs           — 2 · |out| · K per dot (MXU work; elementwise flops
+                          are excluded and noted in EXPERIMENTS.md)
+  * HBM bytes           — per top-level op: operand + output bytes.  In
+                          optimized HLO, fusions are single ops whose
+                          operands/results ARE the memory-traffic boundaries,
+                          so this is a faithful fusion-aware traffic model.
+  * collective bytes    — output-shape bytes of all-gather / all-reduce /
+                          reduce-scatter / all-to-all / collective-permute
+                          (+ async -start forms), by kind.
+
+All totals are PER-DEVICE (the compiled module is the per-device program;
+shapes are already partitioned).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPNAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALLEE_RE = re.compile(
+    r"(?:condition|body|calls|to_apply|branch_computations)=\{?%?([\w.\-,% ]+)\}?")
+
+
+def _shape_dims(shape_str: str):
+    out = []
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",") if x]
+        out.append((dt, d))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    out_shape: str
+    operands: list
+    attrs: str
+    callees: list = field(default_factory=list)
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)   # op name -> shape str
+
+
+# first `name(` token after the output shape; shape text (even tuples with
+# /*index=N*/ comments) never contains a lowercase word directly followed
+# by '(' — so the first match is the op kind
+_CALL_RE = re.compile(r"(?:^|\s)([a-z][a-z0-9\-]*)\(")
+
+
+def parse_module(hlo: str) -> dict:
+    """HLO text → {computation name: Computation}."""
+    comps = {}
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+        if header and "->" in line and line.rstrip().endswith("{") \
+                and " = " not in line.split("->")[0]:
+            cur = Computation(name=header.group(1))
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        m = _OPNAME_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        km = _CALL_RE.search(rhs)
+        if not km:
+            continue
+        out_shape, kind = rhs[:km.start()].strip(), km.group(1)
+        # operands: %names inside the (...) following the op kind
+        after = rhs[km.end():]
+        depth, args = 1, ""
+        for ch in after:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            args += ch
+        operands = re.findall(r"%([\w.\-]+)", args)
+        callees = []
+        for cm in _CALLEE_RE.finditer(rhs):
+            for c in cm.group(1).split(","):
+                c = c.strip().lstrip("%")
+                if c:
+                    callees.append(c)
+        op = Op(name=name, kind=kind, out_shape=out_shape,
+                operands=operands, attrs=rhs, callees=callees,
+                is_root=line.lstrip().startswith("ROOT"))
+        cur.ops.append(op)
+        cur.shapes[name] = out_shape
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop bound = the largest integer constant in the condition."""
+    best = 1
+    for op in cond.ops:
+        for m in re.finditer(r"constant\((\d+)\)", op.attrs):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+_SKIP_KINDS = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "copy", "after-all", "iota", "broadcast",
+               "reshape", "convert", "transpose"}
+
+# Elementwise ops the TPU backend fuses into their producers/consumers; the
+# CPU backend leaves many unfused, inflating the as-compiled byte count.
+# The "fused" byte model (hbm_bytes) skips these; the raw model
+# (hbm_bytes_raw) keeps them.  See EXPERIMENTS.md §Roofline.
+_ELEMENTWISE = {"multiply", "add", "subtract", "divide", "select", "compare",
+                "exponential", "negate", "maximum", "minimum", "rsqrt",
+                "sqrt", "tanh", "power", "and", "or", "not", "xor", "log",
+                "log-plus-one", "exponential-minus-one", "sign", "floor",
+                "ceil", "abs", "clamp", "round-nearest-afz",
+                "round-nearest-even", "shift-left", "shift-right-logical",
+                "shift-right-arithmetic", "is-finite", "atan2", "rem",
+                "cosine", "sine", "logistic", "cbrt", "erf", "map", "pad",
+                "concatenate", "slice", "reverse", "rng", "rng-bit-generator"}
+
+
+def _dot_flops(op: Op, shapes: dict) -> float:
+    out_elems = 1
+    for _, dims in _shape_dims(op.out_shape):
+        for d in dims:
+            out_elems *= d
+    lhs_shape = shapes.get(op.operands[0], "") if op.operands else ""
+    lhs_dims = _shape_dims(lhs_shape)
+    k = 1
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    if mc and lhs_dims:
+        dims = lhs_dims[0][1]
+        for idx in mc.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                k *= dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def analyze(hlo: str, entry: str | None = None) -> dict:
+    """Aggregate per-device stats with while-loop trip multipliers."""
+    comps = parse_module(hlo)
+    if not comps:
+        return {"dot_flops": 0.0, "hbm_bytes": 0.0, "hbm_bytes_raw": 0.0,
+                "collectives": {"total_bytes": 0.0, "bytes": {}, "count": {}},
+                "while_trips": {}}
+    # entry = computation never referenced as a callee
+    refs = {c for comp in comps.values() for op in comp.ops for c in op.callees}
+    entries = [n for n in comps if n not in refs]
+    entry = entry or (entries[-1] if entries else list(comps)[-1])
+
+    memo = {}
+    trips_seen = {}
+
+    def _root_op(comp: Computation):
+        for op in comp.ops:
+            if op.is_root:
+                return op
+        return comp.ops[-1] if comp.ops else None
+
+    # ops a fused TPU consumer streams THROUGH (the producer chain's inputs
+    # are what actually cross HBM — e.g. int4-packed weights feeding a
+    # dequant-multiply feeding a dot, or an int8 KV cache feeding a convert)
+    _CHAIN = {"convert", "multiply", "add", "subtract", "divide", "negate",
+              "broadcast", "reshape", "transpose", "copy", "bitcast",
+              "select", "maximum", "minimum", "slice"}
+    _stream_memo = {}
+    _ew_fusion_memo = {}
+
+    def _elementwise_only(cname: str) -> bool:
+        """True iff the called computation contains no compute-bearing op —
+        such fusions (dequant chains, mask/softmax pieces) fuse into their
+        consumers on TPU and are skipped in the fused byte model."""
+        if cname in _ew_fusion_memo:
+            return _ew_fusion_memo[cname]
+        c = comps.get(cname)
+        ok = c is not None and all(
+            o.kind in _ELEMENTWISE or o.kind in _SKIP_KINDS
+            or o.kind == "dynamic-slice"
+            for o in c.ops)
+        _ew_fusion_memo[cname] = ok
+        return ok
+
+    def _streamed_bytes(name: str, comp: Computation, depth: int = 0) -> float:
+        """Bytes the ultimate sources of `name` occupy, resolving through
+        elementwise/layout chains (fused on TPU).  Falls back to the
+        tensor's own bytes when the chain is not resolvable."""
+        key = (comp.name, name)
+        if key in _stream_memo:
+            return _stream_memo[key]
+        own = _shape_bytes(comp.shapes.get(name, ""))
+        idx = getattr(comp, "_idx", None)
+        if idx is None:
+            idx = {o.name: o for o in comp.ops}
+            object.__setattr__(comp, "_idx", idx)
+        producer = idx.get(name)
+        chainable = producer is not None and (
+            producer.kind in _CHAIN
+            or (producer.kind == "fusion" and producer.callees
+                and _elementwise_only(producer.callees[0])))
+        if not chainable or depth > 12:
+            _stream_memo[key] = own
+            return own
+        total = 0.0
+        for o in producer.operands:
+            total += _streamed_bytes(o, comp, depth + 1)
+        out = min(own, total) if total else own
+        _stream_memo[key] = out
+        return out
+
+    def _op_bytes(op: Op, comp: Computation, fused: bool = False) -> float:
+        """In-place-aware traffic for one op at fusion granularity."""
+        if fused and op.kind in ("dot", "convolution"):
+            b = _shape_bytes(op.out_shape)
+            for o in op.operands:
+                b += _streamed_bytes(o, comp)
+            return b
+        if op.kind == "dynamic-update-slice":
+            upd = _shape_bytes(comp.shapes.get(op.operands[1], "")) \
+                if len(op.operands) > 1 else 0
+            return 2.0 * upd                       # read-modify-write the slice
+        if op.kind == "dynamic-slice":
+            return 2.0 * _shape_bytes(op.out_shape)
+        if op.kind in ("fusion", "call"):
+            # a fusion rooted in a DUS updates its big operand in place
+            callee = comps.get(op.callees[0]) if op.callees else None
+            if callee is not None:
+                root = _root_op(callee)
+                if root is not None and root.kind == "dynamic-update-slice":
+                    upd = _shape_bytes(
+                        callee.shapes.get(root.operands[1], "")) \
+                        if len(root.operands) > 1 else 0
+                    aliased = _shape_bytes(op.out_shape)
+                    b = 2.0 * upd
+                    skipped = False
+                    for o in op.operands:
+                        ob = _shape_bytes(comp.shapes.get(o, ""))
+                        if ob == aliased and not skipped:
+                            skipped = True         # the in-place buffer
+                            continue
+                        b += ob
+                    return b
+        b = _shape_bytes(op.out_shape)
+        for o in op.operands:
+            b += _shape_bytes(comp.shapes.get(o, ""))
+        return b
+
+    def _merge(acc, sub, mult=1.0):
+        acc["dot_flops"] += mult * sub["dot_flops"]
+        acc["hbm_bytes"] += mult * sub["hbm_bytes"]
+        acc["hbm_bytes_raw"] += mult * sub["hbm_bytes_raw"]
+        for k, v in sub["coll_bytes"].items():
+            acc["coll_bytes"][k] += mult * v
+        for k, v in sub["coll_count"].items():
+            acc["coll_count"][k] += mult * v
+
+    def visit(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        acc = {"dot_flops": 0.0, "hbm_bytes": 0.0, "hbm_bytes_raw": 0.0,
+               "coll_bytes": defaultdict(float), "coll_count": defaultdict(float)}
+        if comp is None:
+            memo[name] = acc
+            return acc
+        memo[name] = acc  # guard cycles
+        for op in comp.ops:
+            if op.kind == "while":
+                mcond = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                mbody = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                trips = 1
+                if mcond and mcond.group(1) in comps:
+                    trips = _trip_count(comps[mcond.group(1)])
+                trips_seen[op.name] = trips
+                if mbody:
+                    _merge(acc, visit(mbody.group(1)), trips)
+                continue
+            if op.kind == "conditional":
+                for c in op.callees:
+                    _merge(acc, visit(c))
+                continue
+            kind = op.kind
+            base = kind.replace("-start", "")
+            if base in _COLL_KINDS:
+                b = _shape_bytes(op.out_shape)
+                acc["coll_bytes"][base] += b
+                acc["coll_count"][base] += 1
+                acc["hbm_bytes"] += b  # collectives also touch HBM
+                acc["hbm_bytes_raw"] += b
+                continue
+            if kind.endswith("-done"):
+                continue
+            if kind in ("dot", "convolution"):
+                acc["dot_flops"] += _dot_flops(op, comp.shapes)
+            if kind in _SKIP_KINDS:
+                continue
+            acc["hbm_bytes_raw"] += _op_bytes(op, comp)
+            if kind not in _ELEMENTWISE:
+                acc["hbm_bytes"] += _op_bytes(op, comp, fused=True)
+        return acc
+
+    total = visit(entry)
+    return {
+        "dot_flops": total["dot_flops"],
+        "hbm_bytes": total["hbm_bytes"],
+        "hbm_bytes_raw": total["hbm_bytes_raw"],
+        "collectives": {
+            "total_bytes": float(sum(total["coll_bytes"].values())),
+            "bytes": {k: float(v) for k, v in total["coll_bytes"].items()},
+            "count": {k: float(v) for k, v in total["coll_count"].items()},
+        },
+        "while_trips": trips_seen,
+        "entry": entry,
+    }
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Loop-aware collective traffic (per device)."""
+    return analyze(hlo_text)["collectives"]
+
+
+def count_ops(hlo_text: str, name: str) -> int:
+    return len(re.findall(rf"\b{re.escape(name)}\(", hlo_text))

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before its first jax call).
+
+Topology notes (TPU v5e): 16×16 = 256 chips per pod; the multi-pod mesh adds
+a leading 'pod' axis (DCN-connected).  'data' axes carry batch/DP, 'model'
+carries Megatron-style TP (+ expert-parallel for MoE).  GSPMD emits
+hierarchical collectives from the mesh order (pod outermost → cross-pod
+reductions happen once per step on already-reduced values).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, *, pod: int = 0):
+    """Small mesh for in-process sharding tests (host devices)."""
+    if pod:
+        return jax.make_mesh((pod, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

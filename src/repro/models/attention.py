@@ -1,0 +1,206 @@
+"""GQA attention with RoPE, sliding-window, KV caches and cross-attention.
+
+Cache layout (per layer): {"k": (B, C, Hkv, D), "v": (B, C, Hkv, D)} where
+C = cache capacity.  Dense-attention archs use C = seq_len and write slot
+``pos``; SWA archs use C = window and write slot ``pos % window`` (a ring
+buffer — the visible set is then exactly the last `window` tokens, so the
+mask "slot ≤ pos" is correct in both regimes; see ref.flash_attention_ref).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import linear
+from repro.models.common import apply_rope, rope_freqs
+
+
+def init(rng, cfg: ModelConfig, d_in: Optional[int] = None) -> dict:
+    d_in = d_in or cfg.d_model
+    dh = cfg.d_head
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": linear.init(ks[0], d_in, cfg.n_heads * dh, bias=cfg.qkv_bias),
+        "wk": linear.init(ks[1], d_in, cfg.n_kv_heads * dh, bias=cfg.qkv_bias),
+        "wv": linear.init(ks[2], d_in, cfg.n_kv_heads * dh, bias=cfg.qkv_bias),
+        "wo": linear.init(ks[3], cfg.n_heads * dh, cfg.d_model),
+    }
+
+
+def cache_capacity(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.swa_window is not None:
+        return min(cfg.swa_window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               n_layers: Optional[int] = None) -> dict:
+    """Stacked-over-layers self-attention cache.
+
+    kv_cache_dtype='int8' (§Perf): values stored int8 with one f16 scale per
+    (token, head) — halves the decode memory-roofline term; the dequant
+    fuses into the attention dot (the paper §3.2 notes PEQA composes with
+    weight-activation quantization — this is that composition for the KV)."""
+    n_layers = n_layers if n_layers is not None else cfg.n_layers
+    c = cache_capacity(cfg, seq_len)
+    shape = (n_layers, batch, c, cfg.n_kv_heads, cfg.d_head)
+    if cfg.kv_cache_dtype == "int8":
+        sshape = (n_layers, batch, c, cfg.n_kv_heads)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float16),
+                "v_scale": jnp.zeros(sshape, jnp.float16)}
+    dtype = jnp.dtype(cfg.dtype)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _qkv(p, x, cfg: ModelConfig):
+    spec = cfg.quant.spec()
+    mode = cfg.tuning.mode
+    b, s, _ = x.shape
+    dh = cfg.d_head
+    q = linear.apply(p["wq"], x, spec, mode=mode).reshape(b, s, cfg.n_heads, dh)
+    k = linear.apply(p["wk"], x, spec, mode=mode).reshape(b, s, cfg.n_kv_heads, dh)
+    v = linear.apply(p["wv"], x, spec, mode=mode).reshape(b, s, cfg.n_kv_heads, dh)
+    return q, k, v
+
+
+def apply_train(p: dict, x: jax.Array, cfg: ModelConfig,
+                positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence causal attention (training / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.use_rope:
+        freqs = rope_freqs(cfg)
+        pos = positions if positions is not None else jnp.arange(s)
+        q = apply_rope(q, pos, freqs)
+        k = apply_rope(k, pos, freqs)
+    o = ops.attention(q, k, v, causal=True, window=cfg.swa_window,
+                      impl=cfg.attn_impl)
+    o = o.reshape(b, s, cfg.n_heads * cfg.d_head)
+    return linear.apply(p["wo"], o, cfg.quant.spec(), mode=cfg.tuning.mode)
+
+
+def apply_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache_k: jax.Array,
+                 cache_v: jax.Array, pos: jax.Array):
+    """One-token decode: x (B, 1, d); cache (B, C, Hkv, D); pos scalar i32.
+
+    Returns (out (B, 1, d_model), new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    cap = cache_k.shape[1]
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.use_rope:
+        freqs = rope_freqs(cfg)
+        q = apply_rope(q, pos, freqs)
+        k = apply_rope(k, pos, freqs)
+    slot = jnp.mod(pos, cap) if cfg.swa_window is not None else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    # visible = slots with index <= pos (ring: all written slots; dense: prefix)
+    o = ops.attention(q, cache_k, cache_v, causal=True, offset=pos,
+                      impl=cfg.attn_impl)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.d_head)
+    out = linear.apply(p["wo"], o, cfg.quant.spec(), mode=cfg.tuning.mode)
+    return out, cache_k, cache_v
+
+
+def quantize_kv(t: jax.Array):
+    """(…, H, D) bf16 → (int8 codes, f16 per-(…,H) scale). Symmetric, the
+    standard KV-quant recipe; dequant fuses into the attention dot."""
+    amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+            ).astype(dtype)
+
+
+def apply_decode_q8(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict,
+                    pos: jax.Array):
+    """One-token decode against an int8-quantized KV cache (§Perf knob
+    kv_cache_dtype='int8').  cache: {k, v: int8 (B,C,H,D); k_scale, v_scale:
+    f16 (B,C,H)}. Returns (out, new_cache)."""
+    b = x.shape[0]
+    cap = cache["k"].shape[1]
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.use_rope:
+        freqs = rope_freqs(cfg)
+        q = apply_rope(q, pos, freqs)
+        k = apply_rope(k, pos, freqs)
+    slot = jnp.mod(pos, cap) if cfg.swa_window is not None else pos
+    k8, ks = quantize_kv(k)
+    v8, vs = quantize_kv(v)
+    upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
+        buf, val.astype(buf.dtype), slot, axis=1)
+    cache = {"k": upd(cache["k"], k8), "v": upd(cache["v"], v8),
+             "k_scale": upd(cache["k_scale"], ks),
+             "v_scale": upd(cache["v_scale"], vs)}
+    kf = dequantize_kv(cache["k"], cache["k_scale"], x.dtype)
+    vf = dequantize_kv(cache["v"], cache["v_scale"], x.dtype)
+    o = ops.attention(q, kf, vf, causal=True, offset=pos, impl=cfg.attn_impl)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.d_head)
+    out = linear.apply(p["wo"], o, cfg.quant.spec(), mode=cfg.tuning.mode)
+    return out, cache
+
+
+def apply_prefill(p: dict, x: jax.Array, cfg: ModelConfig, cap: int):
+    """Full-sequence causal attention that also emits the decode cache.
+
+    Returns (out (B,S,d_model), ck (B,cap,Hkv,D), cv) with cache in ring
+    layout (slot of token t = t % cap; a no-op roll when cap == S).
+    """
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.use_rope:
+        freqs = rope_freqs(cfg)
+        pos = jnp.arange(s)
+        q = apply_rope(q, pos, freqs)
+        k = apply_rope(k, pos, freqs)
+    o = ops.attention(q, k, v, causal=True, window=cfg.swa_window)
+    o = o.reshape(b, s, cfg.n_heads * cfg.d_head)
+    out = linear.apply(p["wo"], o, cfg.quant.spec(), mode=cfg.tuning.mode)
+    ck = jnp.roll(k[:, s - cap:], s % cap, axis=1).astype(x.dtype)
+    cv = jnp.roll(v[:, s - cap:], s % cap, axis=1).astype(x.dtype)
+    return out, ck, cv
+
+
+def prefill_cache_entry(ck, cv, cfg: ModelConfig) -> dict:
+    """Package prefill K/V into the configured cache layout."""
+    if cfg.kv_cache_dtype == "int8":
+        k8, ks = quantize_kv(ck)
+        v8, vs = quantize_kv(cv)
+        return {"k": k8, "v": v8, "k_scale": ks, "v_scale": vs}
+    return {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_init(rng, cfg: ModelConfig) -> dict:
+    return init(rng, cfg)
+
+
+def cross_apply(p: dict, x: jax.Array, enc: jax.Array, cfg: ModelConfig
+                ) -> jax.Array:
+    """x: (B, S, d) decoder states; enc: (B, T, d) encoder output."""
+    spec = cfg.quant.spec()
+    mode = cfg.tuning.mode
+    b, s, _ = x.shape
+    t = enc.shape[1]
+    dh = cfg.d_head
+    q = linear.apply(p["wq"], x, spec, mode=mode).reshape(b, s, cfg.n_heads, dh)
+    k = linear.apply(p["wk"], enc, spec, mode=mode).reshape(b, t, cfg.n_kv_heads, dh)
+    v = linear.apply(p["wv"], enc, spec, mode=mode).reshape(b, t, cfg.n_kv_heads, dh)
+    o = ops.attention(q, k, v, causal=False)
+    o = o.reshape(b, s, cfg.n_heads * dh)
+    return linear.apply(p["wo"], o, spec, mode=mode)

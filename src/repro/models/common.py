@@ -1,0 +1,133 @@
+"""Shared neural building blocks: norms, RoPE, MLPs, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import linear
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, d: int | None = None) -> dict:
+    d = d or cfg.d_model
+    p = {"g": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        p["b"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["g"] + p["b"]
+    else:  # rmsnorm
+        y = xf * jax.lax.rsqrt((xf ** 2).mean(-1, keepdims=True) + cfg.norm_eps)
+        y = y * p["g"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig, d: int | None = None) -> jax.Array:
+    d = d or cfg.d_head
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, freqs: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); positions: (S,) or scalar absolute positions."""
+    positions = jnp.asarray(positions, jnp.float32)
+    if positions.ndim == 0:
+        positions = positions[None]
+    ang = positions[:, None] * freqs[None, :]          # (S, D/2)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN)
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, cfg: ModelConfig, d_in: int | None = None,
+             d_ff: int | None = None) -> dict:
+    d_in = d_in or cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    p = {
+        "up": linear.init(ks[0], d_in, d_ff),
+        "down": linear.init(ks[1], d_ff, d_in),
+    }
+    if cfg.act == "silu":  # gated (SwiGLU family)
+        p["gate"] = linear.init(ks[2], d_in, d_ff)
+    return p
+
+
+def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    spec = cfg.quant.spec()
+    mode = cfg.tuning.mode
+    up = linear.apply(p["up"], x, spec, mode=mode)
+    if "gate" in p:
+        gate = linear.apply(p["gate"], x, spec, mode=mode)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return linear.apply(p["down"], h, spec, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embed_init(rng, cfg: ModelConfig) -> dict:
+    emb = jax.random.normal(rng, (cfg.vocab_size, cfg.d_model)) * 0.02
+    return {"emb": emb.astype(jnp.float32)}
+
+
+def embed_apply(p: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dtype = jnp.dtype(cfg.dtype)
+    return p["emb"].astype(dtype)[tokens]
+
+
+def head_init(rng, cfg: ModelConfig) -> dict:
+    if cfg.tie_embeddings:
+        return {}
+    return {"lm_head": linear.init(rng, cfg.d_model, cfg.vocab_size)}
+
+
+def head_apply(p_head: dict, p_embed: dict, x: jax.Array, cfg: ModelConfig
+               ) -> jax.Array:
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", x, p_embed["emb"].astype(x.dtype),
+                          preferred_element_type=jnp.float32)
+    y = linear.apply(p_head["lm_head"], x, cfg.quant.spec(), mode=cfg.tuning.mode)
+    return y.astype(jnp.float32)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Token-mean cross entropy; logits (..., V) f32, labels (...) int32.
+
+    Gold-logit extraction uses a one-hot contraction, NOT take_along_axis:
+    with the vocab dim sharded over 'model' (dist/sharding.py), a gather
+    along the sharded dim would force GSPMD to all-gather the logits; the
+    one-hot form reduces locally and psums a scalar."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

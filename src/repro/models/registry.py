@@ -1,0 +1,119 @@
+"""Model registry: one API over all architecture families.
+
+``build(cfg)`` returns a ``ModelAPI`` whose five functions are everything the
+trainer, server, benchmarks and dry-run ever call.  ``input_specs`` produces
+ShapeDtypeStruct stand-ins for any assigned ShapeConfig — the dry-run lowers
+against these without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import attention, linear, transformer, whisper, xlstm, zamba2
+
+
+def _scoped(cfg: ModelConfig, fn):
+    """Apply cfg-level precision scope around a model function."""
+    if not cfg.bf16_reduce:
+        return fn
+
+    def wrapped(*a, **kw):
+        with linear.reduce_precision_scope(True):
+            return fn(*a, **kw)
+    return wrapped
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable            # (rng) -> params
+    loss_fn: Callable         # (params, batch) -> scalar
+    prefill: Callable         # (params, batch) -> (last_logits, cache)
+    decode_step: Callable     # (params, cache, tokens, pos) -> (logits, cache)
+    init_cache: Callable      # (batch, seq_len) -> cache pytree
+
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        return input_specs(self.cfg, shape)
+
+    def cache_specs(self, shape: ShapeConfig) -> dict:
+        return jax.eval_shape(
+            lambda: self.init_cache(shape.global_batch, shape.seq_len))
+
+
+def _tok_spec(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Batch pytree of ShapeDtypeStruct for (cfg, shape)."""
+    b, s = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        return {"tokens": _tok_spec(b, 1),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    batch: dict = {}
+    if cfg.family == "vlm":
+        p = cfg.n_img_tokens
+        batch["image_embeds"] = jax.ShapeDtypeStruct((b, p, cfg.d_model), dtype)
+        batch["tokens"] = _tok_spec(b, s - p)
+        batch["labels"] = _tok_spec(b, s - p)
+    elif cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_frames, cfg.d_model), dtype)
+        batch["tokens"] = _tok_spec(b, s)
+        batch["labels"] = _tok_spec(b, s)
+    else:
+        batch["tokens"] = _tok_spec(b, s)
+        batch["labels"] = _tok_spec(b, s)
+    if shape.kind == "prefill":
+        batch.pop("labels", None)
+    return batch
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        def prefill_fn(params, batch):
+            return transformer.prefill(params, batch["tokens"], cfg,
+                                       prefix_embeds=batch.get("image_embeds"))
+
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: transformer.init(rng, cfg),
+            loss_fn=_scoped(cfg, lambda p, b: transformer.loss_fn(p, b, cfg)),
+            prefill=_scoped(cfg, prefill_fn),
+            decode_step=_scoped(cfg, lambda p, c, t, pos: transformer.decode_step(p, c, t, pos, cfg)),
+            init_cache=lambda b, s: attention.init_cache(cfg, b, s),
+        )
+    if fam == "hybrid":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: zamba2.init(rng, cfg),
+            loss_fn=lambda p, b: zamba2.loss_fn(p, b, cfg),
+            prefill=lambda p, b: zamba2.prefill(p, b["tokens"], cfg),
+            decode_step=lambda p, c, t, pos: zamba2.decode_step(p, c, t, pos, cfg),
+            init_cache=lambda b, s: zamba2.init_cache(cfg, b, s),
+        )
+    if fam == "ssm":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: xlstm.init(rng, cfg),
+            loss_fn=lambda p, b: xlstm.loss_fn(p, b, cfg),
+            prefill=lambda p, b: xlstm.prefill(p, b["tokens"], cfg),
+            decode_step=lambda p, c, t, pos: xlstm.decode_step(p, c, t, pos, cfg),
+            init_cache=lambda b, s: xlstm.init_cache(cfg, b, s),
+        )
+    if fam == "encdec":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: whisper.init(rng, cfg),
+            loss_fn=lambda p, b: whisper.loss_fn(p, b, cfg),
+            prefill=lambda p, b: whisper.prefill(p, b["frames"], b["tokens"], cfg),
+            decode_step=lambda p, c, t, pos: whisper.decode_step(p, c, t, pos, cfg),
+            init_cache=lambda b, s: whisper.init_cache(cfg, b, s),
+        )
+    raise ValueError(f"unknown family {fam}")

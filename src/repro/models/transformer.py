@@ -1,0 +1,183 @@
+"""Decoder-only transformer backbone (dense, MoE, VLM-prefix variants).
+
+Layers are stored STACKED (leading dim = n_layers on every leaf) and executed
+with ``jax.lax.scan`` — this keeps the HLO size O(1) in depth (critical for
+the 512-device dry-run compiles) and is the standard MaxText-style layout.
+``cfg.remat`` wraps the per-layer body in ``jax.checkpoint``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist import context as dctx
+from repro.kernels import ops
+from repro.models import attention, common, linear, moe
+from repro.models.common import apply_rope
+
+
+def _block_init(rng, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(rng, 3)
+    p = {
+        "ln1": common.norm_init(cfg),
+        "attn": attention.init(ks[0], cfg),
+        "ln2": common.norm_init(cfg),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe.init(ks[1], cfg)
+    else:
+        p["mlp"] = common.mlp_init(ks[1], cfg)
+    return p
+
+
+def init(rng, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(rng, 4)
+    layer_rngs = jax.random.split(ks[0], cfg.n_layers)
+    layers = jax.vmap(lambda r: _block_init(r, cfg))(layer_rngs)
+    params = {
+        "embed": common.embed_init(ks[1], cfg),
+        "layers": layers,
+        "final_norm": common.norm_init(cfg),
+    }
+    params.update(common.head_init(ks[2], cfg))
+    return params
+
+
+def _block_train(layer_p: dict, h: jax.Array, cfg: ModelConfig,
+                 positions: Optional[jax.Array]):
+    """Pre-norm block, full-sequence. Returns (h, aux_loss)."""
+    a = attention.apply_train(layer_p["attn"],
+                              common.norm_apply(layer_p["ln1"], h, cfg),
+                              cfg, positions)
+    if cfg.constrain_block_outputs:
+        # force the block output (and thus its backward cotangent) into the
+        # SP layout: the model-axis cotangent psum becomes a reduce-scatter
+        a = dctx.constrain_tokens(a, cfg.seq_shard)
+    h = h + a
+    hin = common.norm_apply(layer_p["ln2"], h, cfg)
+    if "moe" in layer_p:
+        m, aux = moe.apply(layer_p["moe"], hin, cfg)
+    else:
+        m, aux = common.mlp_apply(layer_p["mlp"], hin, cfg), 0.0
+    if cfg.constrain_block_outputs:
+        m = dctx.constrain_tokens(m, cfg.seq_shard)
+    return h + m, aux
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            prefix_embeds: Optional[jax.Array] = None) -> tuple:
+    """Full-sequence forward. Returns (logits f32 (B, S, V), aux_loss).
+
+    prefix_embeds (VLM): (B, P, d) precomputed patch embeddings prepended to
+    the token embeddings; total sequence = P + len(tokens).
+    """
+    h = common.embed_apply(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    s = h.shape[1]
+    positions = jnp.arange(s)
+    h = dctx.constrain_tokens(h, cfg.seq_shard)
+
+    def body(carry, layer_p):
+        h, aux = carry
+        h, a = _block_train(layer_p, h, cfg, positions)
+        h = dctx.constrain_tokens(h, cfg.seq_shard)
+        return (h, aux + a), None
+
+    body_fn = body
+    if cfg.remat == "dots":
+        # save dot outputs, recompute elementwise — trades residency for a
+        # smaller backward-recompute HBM stream (§Perf lever for deep stacks)
+        body_fn = jax.checkpoint(
+            body, prevent_cse=False,
+            policy=jax.checkpoint_policies.checkpoint_dots)
+    elif cfg.remat in ("block", "full"):
+        body_fn = jax.checkpoint(body, prevent_cse=False)
+    (h, aux), _ = jax.lax.scan(body_fn, (h, 0.0), params["layers"])
+    h = common.norm_apply(params["final_norm"], h, cfg)
+    logits = common.head_apply(params, params["embed"], h, cfg)
+    return logits, aux
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
+    logits, aux = forward(params, batch["tokens"], cfg,
+                          prefix_embeds=batch.get("image_embeds"))
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:       # VLM prefix: loss on text only
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    ce = common.cross_entropy(logits, labels, batch.get("mask"))
+    coef = cfg.moe.router_aux_coef if cfg.moe is not None else 0.0
+    return ce + coef * aux
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            prefix_embeds: Optional[jax.Array] = None):
+    """Prefill: forward over the prompt, building the KV cache.
+
+    Returns (last_logits (B, V), cache).
+    """
+    h = common.embed_apply(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    b, s, _ = h.shape
+    positions = jnp.arange(s)
+    cap = attention.cache_capacity(cfg, s)
+    h = dctx.constrain_tokens(h, cfg.seq_shard)
+
+    def body(h, layer_p):
+        hin = common.norm_apply(layer_p["ln1"], h, cfg)
+        a, ck, cv = attention.apply_prefill(layer_p["attn"], hin, cfg, cap)
+        h = h + a
+        hin = common.norm_apply(layer_p["ln2"], h, cfg)
+        if "moe" in layer_p:
+            m, _ = moe.apply(layer_p["moe"], hin, cfg)
+        else:
+            m = common.mlp_apply(layer_p["mlp"], hin, cfg)
+        h = dctx.constrain_tokens(h + m, cfg.seq_shard)
+        return h, attention.prefill_cache_entry(ck, cv, cfg)
+
+    if cfg.remat in ("block", "full"):
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, cache = jax.lax.scan(body, h, params["layers"])
+    h = common.norm_apply(params["final_norm"], h, cfg)
+    logits = common.head_apply(params, params["embed"], h[:, -1:], cfg)
+    return logits[:, 0], cache
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
+                cfg: ModelConfig):
+    """One decode step. tokens (B, 1); pos scalar int32 (next position).
+
+    Returns (logits (B, V) f32, new_cache).
+    """
+    h = common.embed_apply(params["embed"], tokens, cfg)
+
+    q8 = cfg.kv_cache_dtype == "int8"
+
+    def body(h, xs):
+        layer_p, layer_cache = xs
+        hin = common.norm_apply(layer_p["ln1"], h, cfg)
+        if q8:
+            a, layer_cache = attention.apply_decode_q8(
+                layer_p["attn"], hin, cfg, layer_cache, pos)
+        else:
+            a, ck, cv = attention.apply_decode(
+                layer_p["attn"], hin, cfg, layer_cache["k"],
+                layer_cache["v"], pos)
+            layer_cache = {"k": ck, "v": cv}
+        h = h + a
+        hin = common.norm_apply(layer_p["ln2"], h, cfg)
+        if "moe" in layer_p:
+            m, _ = moe.apply(layer_p["moe"], hin, cfg)
+        else:
+            m = common.mlp_apply(layer_p["mlp"], hin, cfg)
+        return h + m, layer_cache
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+    h = common.norm_apply(params["final_norm"], h, cfg)
+    logits = common.head_apply(params, params["embed"], h, cfg)
+    return logits[:, 0], new_cache

@@ -1,0 +1,92 @@
+"""Masked AdamW, built from scratch (no optax in this environment).
+
+The mask is the whole point (paper §3.1): frozen leaves get NO moment
+buffers — optimizer state is allocated ONLY for trainable parameters, so
+PEQA's optimizer state is O(#scales).  benchmarks/table1_memory.py audits
+this by literally counting bytes of the returned state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimConfig
+
+
+class _Empty(NamedTuple):
+    """Zero-byte placeholder for frozen leaves."""
+
+
+EMPTY = _Empty()
+
+
+def _is_float0(g) -> bool:
+    return getattr(g, "dtype", None) == jax.dtypes.float0
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskedAdamW:
+    cfg: OptimConfig
+    schedule: Callable  # step -> lr
+
+    def init(self, params, mask):
+        def leaf_state(p, m):
+            if not m:
+                return (EMPTY, EMPTY)
+            # two distinct buffers (donation forbids aliased arguments)
+            return (jnp.zeros_like(p, dtype=jnp.float32),
+                    jnp.zeros_like(p, dtype=jnp.float32))
+        mv = jax.tree.map(leaf_state, params, mask)
+        return {"mv": mv, "count": jnp.zeros((), jnp.int32)}
+
+    def state_bytes(self, state) -> int:
+        return sum(x.nbytes for x in jax.tree.leaves(state["mv"])
+                   if hasattr(x, "nbytes"))
+
+    def update(self, grads, state, params, mask):
+        """Returns (new_params, new_state, grad_norm)."""
+        c = self.cfg
+        count = state["count"] + 1
+        lr = self.schedule(count)
+
+        # global-norm clip over trainable grads only
+        sq = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g, m in zip(jax.tree.leaves(grads), jax.tree.leaves(mask))
+              if m and not _is_float0(g)]
+        gnorm = jnp.sqrt(sum(sq) if sq else jnp.zeros(()))
+        clip = jnp.minimum(1.0, c.grad_clip / (gnorm + 1e-9)) \
+            if c.grad_clip else 1.0
+
+        b1, b2 = c.betas
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def leaf(p, g, mv, m):
+            if not m or _is_float0(g):
+                return p, mv
+            mom, vel = mv
+            gf = g.astype(jnp.float32) * clip
+            mom = b1 * mom + (1 - b1) * gf
+            vel = b2 * vel + (1 - b2) * gf * gf
+            upd = (mom / bc1) / (jnp.sqrt(vel / bc2) + c.eps)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (upd + c.weight_decay * pf)
+            return pf.astype(p.dtype), (mom, vel)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_mv = tdef.flatten_up_to(state["mv"])
+        flat_m = jax.tree.leaves(mask)
+        new = [leaf(p, g, mv, m)
+               for p, g, mv, m in zip(flat_p, flat_g, flat_mv, flat_m)]
+        new_params = jax.tree.unflatten(tdef, [x[0] for x in new])
+        new_mv = jax.tree.unflatten(tdef, [x[1] for x in new])
+        return new_params, {"mv": new_mv, "count": count}, gnorm
+
+
+def make_optimizer(ocfg: OptimConfig, total_steps: int) -> MaskedAdamW:
+    from repro.optim.schedules import make_schedule
+    return MaskedAdamW(cfg=ocfg, schedule=make_schedule(ocfg, total_steps))

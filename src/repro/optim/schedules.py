@@ -1,0 +1,28 @@
+"""LR schedules. The paper uses linear decay with warmup (App. A)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import OptimConfig
+
+
+def make_schedule(ocfg: OptimConfig, total_steps: int):
+    warm = max(ocfg.warmup_steps, 1)
+
+    def linear(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm_f = jnp.minimum(s / warm, 1.0)
+        frac = jnp.clip((s - warm) / jnp.maximum(total_steps - warm, 1), 0, 1)
+        return ocfg.lr * warm_f * (1.0 - frac)
+
+    def cosine(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm_f = jnp.minimum(s / warm, 1.0)
+        frac = jnp.clip((s - warm) / jnp.maximum(total_steps - warm, 1), 0, 1)
+        return ocfg.lr * warm_f * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+
+    def constant(step):
+        s = jnp.asarray(step, jnp.float32)
+        return ocfg.lr * jnp.minimum(s / warm, 1.0)
+
+    return {"linear": linear, "cosine": cosine, "constant": constant}[ocfg.schedule]

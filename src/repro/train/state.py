@@ -1,0 +1,41 @@
+"""Train state pytree + sharded initialization helpers."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shard_rules
+
+
+def make_state(params: dict, opt_state: dict, step: int = 0) -> dict:
+    return {"params": params, "opt": opt_state, "step": jnp.asarray(step, jnp.int32)}
+
+
+def state_specs(state: dict) -> dict:
+    """PartitionSpecs for the full train state (opt moments follow params)."""
+    pspecs = shard_rules.param_specs(state["params"])
+
+    def opt_spec(path_spec_tree):
+        return path_spec_tree
+
+    # moments mirror their parameter's spec; EMPTY leaves have no arrays
+    def mv_spec(pspec, mv):
+        if isinstance(mv, tuple) and len(mv) == 2 and hasattr(mv[0], "ndim"):
+            return (pspec, pspec)
+        return jax.tree.map(lambda _: P(), mv)
+
+    mv = jax.tree.map(mv_spec, pspecs, state["opt"]["mv"],
+                      is_leaf=lambda x: isinstance(x, P))
+    return {"params": pspecs,
+            "opt": {"mv": mv, "count": P()},
+            "step": P()}
+
+
+def shard_state(state: dict, mesh) -> dict:
+    specs = state_specs(state)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        state, specs, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,75 @@
+"""Train-step builder: loss → grads → (compressed) → masked AdamW update.
+
+One function serves CPU unit tests, the real training loop, and the 512-
+device dry-run: with a mesh, the returned fn is jitted with NamedShardings
+from dist/sharding.py and donates the state buffers; without one it is a
+plain jit.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.dist import context as dctx
+from repro.optim.adamw import MaskedAdamW
+from repro.optim.compression import compress_tree
+from repro.train.state import state_specs
+
+
+def build_train_step(api, cfg: ModelConfig, tcfg: TrainConfig, mask,
+                     optimizer: MaskedAdamW, mesh=None,
+                     state_example=None, batch_example=None):
+    compress = tcfg.optim.grad_compression == "int8"
+
+    def step_fn(state, batch):
+        loss, grads = jax.value_and_grad(api.loss_fn, allow_int=True)(
+            state["params"], batch)
+        if compress:
+            grads = compress_tree(grads, mask)
+        new_p, new_opt, gnorm = optimizer.update(
+            grads, state["opt"], state["params"], mask)
+        new_state = {"params": new_p, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": optimizer.schedule(new_opt["count"])}
+        return new_state, metrics
+
+    if mesh is None:
+        return jax.jit(step_fn, donate_argnums=(0,))
+
+    assert state_example is not None and batch_example is not None
+    ctx = dctx.make_ctx(mesh)
+    sspecs = state_specs(state_example)
+    bspecs = jax.tree.map(
+        lambda l: P(ctx.data_axes, *([None] * (jnp.ndim(l) - 1)))
+        if jnp.ndim(l) else P(), batch_example)
+    to_shard = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    return jax.jit(
+        step_fn,
+        in_shardings=(to_shard(sspecs), to_shard(bspecs)),
+        out_shardings=(to_shard(sspecs), None),
+        donate_argnums=(0,),
+    )
+
+
+def build_eval_step(api, cfg: ModelConfig, mesh=None, batch_example=None):
+    def eval_fn(params, batch):
+        return api.loss_fn(params, batch)
+
+    if mesh is None:
+        return jax.jit(eval_fn)
+    ctx = dctx.make_ctx(mesh)
+    bspecs = jax.tree.map(
+        lambda l: P(ctx.data_axes, *([None] * (jnp.ndim(l) - 1)))
+        if jnp.ndim(l) else P(), batch_example)
+    to_shard = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    return jax.jit(eval_fn, in_shardings=(None, to_shard(bspecs)))

@@ -1,0 +1,148 @@
+"""Integration tests: the paper's end-to-end claims on CPU-scale models."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import OptimConfig, QuantConfig, TrainConfig, TuningConfig
+from repro.core import policies
+from repro.core.scale_bank import ScaleBank
+from repro.data import pipeline, synthetic
+from repro.models import registry
+from repro.optim.adamw import make_optimizer
+from repro.train import loop as loop_mod
+from repro.train import step as step_mod
+from repro.train.serve import Engine
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    toks = synthetic.corpus(256, 50_000, seed=3)
+    return synthetic.split(toks)
+
+
+def _train(cfg, params, mask, train_toks, steps=80, lr=3e-3, seed=0):
+    api = registry.build(cfg)
+    tcfg = TrainConfig(steps=steps, batch_size=8, seq_len=64,
+                       log_every=25, ckpt_every=10 ** 9,
+                       optim=OptimConfig(lr=lr, warmup_steps=8))
+    data = pipeline.PackedLM(train_toks, 8, 64, seed=seed)
+    opt = make_optimizer(tcfg.optim, tcfg.steps)
+    state = {"params": params, "opt": opt.init(params, mask),
+             "step": jnp.int32(0)}
+    ts = step_mod.build_train_step(api, cfg, tcfg, mask, opt)
+    state, hist = loop_mod.train(state, ts, data, tcfg, log=lambda m: None)
+    return state["params"], hist
+
+
+def _ppl(cfg, params, val_toks):
+    api = registry.build(cfg)
+    ev = jax.jit(api.loss_fn)
+    ls = [float(ev(params, b)) for b in pipeline.eval_batches(val_toks, 8, 64)]
+    return float(np.exp(np.mean(ls)))
+
+
+def test_peqa_training_reduces_loss(corpus):
+    train_toks, val_toks = corpus
+    cfg = configs.paper_lm(n_layers=2, d_model=64, n_heads=4, d_ff=128,
+                           vocab=256).replace(
+        tuning=TuningConfig(mode="peqa"), quant=QuantConfig(bits=4, n_grid=4))
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p, mask = policies.prepare(api.init(rng), cfg, rng)
+    _, hist = _train(cfg, p, mask, train_toks, steps=150)
+    # scale-only training of a RANDOM backbone has limited capacity — the
+    # claim is only that it LEARNS (the restoration test below is the real
+    # paper claim)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.1
+
+
+def test_peqa_restores_rtn_damage(corpus):
+    """Fig/Table 7 claim: PEQA tuning recovers RTN-degraded quality."""
+    train_toks, val_toks = corpus
+    base_cfg = configs.paper_lm(n_layers=2, d_model=64, n_heads=4, d_ff=128,
+                                vocab=256)
+    api = registry.build(base_cfg)
+    rng = jax.random.PRNGKey(0)
+    p0, mask0 = policies.prepare(api.init(rng), base_cfg, rng)
+    fp, _ = _train(base_cfg, p0, mask0, train_toks, steps=250, lr=2e-3)
+    fp_ppl = _ppl(base_cfg, fp, val_toks)
+
+    qcfg = base_cfg.replace(tuning=TuningConfig(mode="peqa"),
+                            quant=QuantConfig(bits=2, n_grid=8))
+    qp, qmask = policies.prepare(jax.tree.map(jnp.array, fp), qcfg, rng)
+    rtn_ppl = _ppl(qcfg, qp, val_toks)
+    tuned, _ = _train(qcfg, qp, qmask, train_toks, steps=100)
+    tuned_ppl = _ppl(qcfg, tuned, val_toks)
+    assert rtn_ppl > fp_ppl, "RTN at 2-bit should damage the model"
+    assert tuned_ppl < rtn_ppl - 0.3 * (rtn_ppl - fp_ppl), \
+        f"PEQA should recover: fp={fp_ppl:.3f} rtn={rtn_ppl:.3f} " \
+        f"tuned={tuned_ppl:.3f}"
+
+
+def test_engine_generate_and_task_switch(corpus):
+    train_toks, _ = corpus
+    cfg = configs.paper_lm(n_layers=2, d_model=64, n_heads=4, d_ff=128,
+                           vocab=256).replace(
+        tuning=TuningConfig(mode="peqa"), quant=QuantConfig(bits=4, n_grid=2))
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p, mask = policies.prepare(api.init(rng), cfg, rng)
+    bank = ScaleBank()
+    bank.add("base", p)
+    tuned, _ = _train(cfg, jax.tree.map(jnp.array, p), mask, train_toks,
+                      steps=50)
+    bank.add("tuned", tuned)
+
+    eng = Engine(api, jax.tree.map(jnp.array, p), bank=bank)
+    prompt = jnp.zeros((2, 4), jnp.int32)
+    out = eng.generate(prompt, n_new=6)
+    assert out.shape == (2, 10)
+    eng.switch_task("tuned")
+    out2 = eng.generate(prompt, n_new=6)
+    assert out2.shape == (2, 10)
+    # switching back reproduces the original continuation exactly
+    eng.switch_task("base")
+    out3 = eng.generate(prompt, n_new=6)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out3))
+
+
+def test_grad_compression_trains(corpus):
+    """int8 QSGD gradient compression still converges."""
+    train_toks, _ = corpus
+    cfg = configs.paper_lm(n_layers=2, d_model=64, n_heads=4, d_ff=128,
+                           vocab=256).replace(
+        tuning=TuningConfig(mode="peqa"), quant=QuantConfig(bits=4, n_grid=2))
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p, mask = policies.prepare(api.init(rng), cfg, rng)
+    tcfg = TrainConfig(steps=60, batch_size=8, seq_len=64,
+                       log_every=20, ckpt_every=10 ** 9,
+                       optim=OptimConfig(lr=3e-3, warmup_steps=8,
+                                         grad_compression="int8"))
+    data = pipeline.PackedLM(train_toks, 8, 64, seed=5)
+    opt = make_optimizer(tcfg.optim, tcfg.steps)
+    state = {"params": p, "opt": opt.init(p, mask), "step": jnp.int32(0)}
+    ts = step_mod.build_train_step(api, cfg, tcfg, mask, opt)
+    state, hist = loop_mod.train(state, ts, data, tcfg, log=lambda m: None)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.1
+
+
+def test_int8_kv_cache_generation_close_to_fp(corpus):
+    cfg = configs.paper_lm(n_layers=2, d_model=64, n_heads=4, d_ff=128,
+                           vocab=256)
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p = api.init(rng)
+    cfg8 = cfg.replace(kv_cache_dtype="int8")
+    api8 = registry.build(cfg8)
+    prompt = jax.random.randint(rng, (2, 6), 0, 256)
+    e1 = Engine(api, p)
+    e2 = Engine(api8, p)
+    o1 = np.asarray(e1.generate(prompt, n_new=8))
+    o2 = np.asarray(e2.generate(prompt, n_new=8))
+    # greedy decode from an UNTRAINED model is chaotic; just demand the
+    # int8 path runs and produces valid tokens
+    assert o2.shape == o1.shape
+    assert (o2 >= 0).all() and (o2 < 256).all()

@@ -1,0 +1,154 @@
+"""Tuning-policy tests: the paper's five arms behave as specified."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import QuantConfig, TuningConfig
+from repro.core import peqa, policies
+from repro.core.scale_bank import ScaleBank, extract_scales
+from repro.models import registry
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.paper_lm(n_layers=2, d_model=64, n_heads=4, d_ff=128,
+                           vocab=256)
+    rng = jax.random.PRNGKey(0)
+    api = registry.build(cfg)
+    p0 = api.init(rng)
+    toks = jax.random.randint(rng, (2, 16), 0, 256)
+    batch = {"tokens": toks, "labels": toks}
+    return cfg, api, p0, batch
+
+
+MODES = ["full", "lora", "lora_optq", "qat", "peqa", "peqa_z"]
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_policy_loss_finite(setup, mode):
+    cfg, api, p0, batch = setup
+    cfg = cfg.replace(tuning=TuningConfig(mode=mode),
+                      quant=QuantConfig(n_grid=3))
+    api = registry.build(cfg)
+    p, mask = policies.prepare(p0, cfg, jax.random.PRNGKey(1))
+    loss = api.loss_fn(p, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_trainable_counts_ordering(setup):
+    """PEQA < LoRA(QV4) << full — the paper's Table 4 relation."""
+    cfg, api, p0, _ = setup
+    counts = {}
+    for mode in ("peqa", "lora", "full"):
+        c = cfg.replace(tuning=TuningConfig(mode=mode),
+                        quant=QuantConfig(n_grid=2))
+        p, mask = policies.prepare(p0, c, jax.random.PRNGKey(1))
+        counts[mode] = policies.trainable_count(p, mask)
+    assert counts["peqa"] < counts["lora"] < counts["full"]
+
+
+def test_peqa_grads_only_scales(setup):
+    cfg, api, p0, batch = setup
+    c = cfg.replace(tuning=TuningConfig(mode="peqa"), quant=QuantConfig(n_grid=2))
+    api = registry.build(c)
+    p, mask = policies.prepare(p0, c, jax.random.PRNGKey(1))
+    grads = jax.grad(api.loss_fn, allow_int=True)(p, batch)
+
+    def path_str(kp):
+        return "/".join(str(getattr(k, "key", k)) for k in kp)
+
+    leaves = jax.tree_util.tree_flatten_with_path(grads)[0]
+    for kp, g in leaves:
+        path = path_str(kp)
+        if g.dtype == jax.dtypes.float0:
+            continue
+        if path.endswith("/scale"):
+            assert float(jnp.max(jnp.abs(g))) > 0, f"no grad at {path}"
+
+
+def test_peqa_freezes_integer_backbone(setup):
+    """After a gradient step on scales, codes are bit-identical."""
+    cfg, api, p0, batch = setup
+    c = cfg.replace(tuning=TuningConfig(mode="peqa"), quant=QuantConfig(n_grid=2))
+    api = registry.build(c)
+    p, mask = policies.prepare(p0, c, jax.random.PRNGKey(1))
+    grads = jax.grad(api.loss_fn, allow_int=True)(p, batch)
+    # naive SGD on trainable leaves
+    newp = jax.tree.map(
+        lambda x, g, m: x - 0.01 * g if (m and g.dtype != jax.dtypes.float0)
+        else x, p, grads, mask)
+    for (kp, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(p)[0],
+            jax.tree_util.tree_flatten_with_path(newp)[0]):
+        path = "/".join(str(getattr(k, "key", k)) for k in kp)
+        if path.endswith("/qw"):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        if path.endswith("/scale"):
+            assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_peqa_dequant_matches_forward(setup):
+    """Ŵ-based fp model == quantized-storage model (same function)."""
+    cfg, api, p0, batch = setup
+    c = cfg.replace(tuning=TuningConfig(mode="peqa"), quant=QuantConfig(n_grid=2))
+    apq = registry.build(c)
+    p, _ = policies.prepare(p0, c, jax.random.PRNGKey(1))
+    loss_q = apq.loss_fn(p, batch)
+    deq = peqa.dequantize_params(p, c.quant)
+    cfull = cfg.replace(tuning=TuningConfig(mode="full"))
+    apf = registry.build(cfull)
+    loss_f = apf.loss_fn(deq, batch)
+    np.testing.assert_allclose(float(loss_q), float(loss_f), rtol=2e-5)
+
+
+def test_scale_bank_roundtrip(setup):
+    cfg, api, p0, batch = setup
+    c = cfg.replace(tuning=TuningConfig(mode="peqa"), quant=QuantConfig(n_grid=2))
+    api = registry.build(c)
+    p, _ = policies.prepare(p0, c, jax.random.PRNGKey(1))
+    bank = ScaleBank()
+    bank.add("taskA", p)
+    # perturb scales → "taskB"
+    pB = jax.tree_util.tree_map_with_path(
+        lambda kp, l: l * 1.1 if str(getattr(kp[-1], "key", "")) == "scale"
+        else l, p)
+    bank.add("taskB", pB)
+    lossA = float(api.loss_fn(p, batch))
+    lossB = float(api.loss_fn(pB, batch))
+    # switch p → taskB then back → taskA reproduces both losses exactly
+    p2 = bank.switch(p, "taskB")
+    assert float(api.loss_fn(p2, batch)) == pytest.approx(lossB, rel=1e-6)
+    p3 = bank.switch(p2, "taskA")
+    assert float(api.loss_fn(p3, batch)) == pytest.approx(lossA, rel=1e-6)
+    # the swap payload is tiny relative to the model
+    total = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(p))
+    assert bank.nbytes("taskA") < 0.1 * total
+
+
+def test_qat_ste_gradient_flows_to_weights(setup):
+    cfg, api, p0, batch = setup
+    c = cfg.replace(tuning=TuningConfig(mode="qat"), quant=QuantConfig(n_grid=2))
+    api = registry.build(c)
+    p, mask = policies.prepare(p0, c, jax.random.PRNGKey(1))
+    grads = jax.grad(api.loss_fn, allow_int=True)(p, batch)
+    leaves = jax.tree_util.tree_flatten_with_path(grads)[0]
+    got_w = False
+    for kp, g in leaves:
+        path = "/".join(str(getattr(k, "key", k)) for k in kp)
+        if path.endswith("attn/wq/w"):
+            got_w = True
+            assert float(jnp.max(jnp.abs(g))) > 0
+    assert got_w
+
+
+def test_lora_zero_init_preserves_forward(setup):
+    """lora_b = 0 → adding LoRA must not change the function."""
+    cfg, api, p0, batch = setup
+    c = cfg.replace(tuning=TuningConfig(mode="lora"))
+    api = registry.build(c)
+    p, _ = policies.prepare(p0, c, jax.random.PRNGKey(1))
+    base = registry.build(cfg.replace(tuning=TuningConfig(mode="full")))
+    np.testing.assert_allclose(float(api.loss_fn(p, batch)),
+                               float(base.loss_fn(p0, batch)), rtol=1e-6)

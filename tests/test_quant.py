@@ -1,0 +1,95 @@
+"""Unit + property tests for the RTN quantizer and packing (paper Eq. 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (PACK, QTensor, QuantSpec, dequantize,
+                              pack_codes, quant_error, rtn_quantize,
+                              unpack_codes)
+
+
+@given(st.integers(1, 5).map(lambda i: i * 8),
+       st.integers(1, 64),
+       st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_bijection(k, n, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, 16, size=(n, k)).astype(np.uint8)
+    packed = pack_codes(jnp.asarray(q))
+    assert packed.shape == (n, k // PACK)
+    out = unpack_codes(packed, k)
+    np.testing.assert_array_equal(np.asarray(out), q)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("group", [None, 32])
+def test_rtn_error_bound(bits, group):
+    """RTN error ≤ scale/2 per element (within the clamp range)."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))
+    spec = QuantSpec(bits=bits, group_size=group, packed=False)
+    q, s, z = rtn_quantize(w, spec, n_grid=1)  # plain min/max: no shrink
+    deq = dequantize(q, s, z, spec)
+    g = spec.n_groups(64)
+    err = np.abs(np.asarray(deq - w)).reshape(16, g, 64 // g)
+    bound = np.asarray(s)[..., None] * 0.5 + 1e-6
+    assert (err <= bound).all()
+
+
+def test_grid_search_improves_or_ties():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray((rng.normal(size=(32, 64)) ** 3).astype(np.float32))  # heavy tails
+    spec = QuantSpec(bits=3, packed=False)
+    q1, s1, z1 = rtn_quantize(w, spec, n_grid=1)
+    qg, sg, zg = rtn_quantize(w, spec, n_grid=20)
+    e1 = float(jnp.sum((dequantize(q1, s1, z1, spec) - w) ** 2))
+    eg = float(jnp.sum((dequantize(qg, sg, zg, spec) - w) ** 2))
+    assert eg <= e1 + 1e-6
+
+
+@pytest.mark.parametrize("bits,rtol", [(4, 0.04), (3, 0.08), (8, 0.003)])
+def test_qtensor_roundtrip_accuracy(bits, rtol):
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(size=(64, 128)).astype(np.float32) * 0.02)
+    qt = QTensor.quantize(w, QuantSpec(bits=bits))
+    rel = float(quant_error(w, qt)) / float(jnp.std(w))
+    assert rel < rtol * 4
+
+
+def test_higher_bits_lower_error():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=(32, 64)).astype(np.float32))
+    errs = [float(quant_error(w, QTensor.quantize(w, QuantSpec(bits=b))))
+            for b in (2, 3, 4, 8)]
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_grouping_lowers_error():
+    """Smaller groups → more scales → lower error (paper Table 5 mechanism)."""
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.normal(size=(16, 256)).astype(np.float32)
+                    * np.linspace(0.1, 3.0, 256)[None, :].astype(np.float32))
+    errs = []
+    for g in (None, 128, 64, 32):
+        qt = QTensor.quantize(w, QuantSpec(bits=3, group_size=g))
+        errs.append(float(quant_error(w, qt)))
+    assert errs == sorted(errs, reverse=True)
+
+
+@given(st.integers(2, 8), st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_codes_in_range(bits, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    spec = QuantSpec(bits=bits, packed=False)
+    q, s, z = rtn_quantize(w, spec)
+    q = np.asarray(q)
+    assert q.min() >= 0 and q.max() <= spec.levels
+
+
+def test_ideal_bytes_accounting():
+    w = jnp.zeros((128, 256), jnp.float32)
+    qt = QTensor.quantize(w, QuantSpec(bits=4))
+    assert qt.nbytes_ideal() == 128 * 256 * 4 // 8 + 2 * 128 * 2
