@@ -71,7 +71,7 @@ def _block_linear_inputs(layer_p: dict, h: jax.Array, cfg: ModelConfig):
     honored → sequential GPTQ)."""
     from repro.models import linear
     from repro.kernels import ops
-    spec, mode = cfg.quant.spec(), cfg.tuning.mode
+    spec = cfg.quant.spec()
     b, s, _ = h.shape
     captures = {}
     hin = common.norm_apply(layer_p["ln1"], h, cfg)
@@ -84,17 +84,17 @@ def _block_linear_inputs(layer_p: dict, h: jax.Array, cfg: ModelConfig):
     o = ops.attention(q, k, v, causal=True, window=cfg.swa_window)
     o = o.reshape(b, s, cfg.n_heads * cfg.d_head)
     captures["attn/wo"] = o
-    h = h + linear.apply(layer_p["attn"]["wo"], o, spec, mode=mode)
+    h = h + linear.apply(layer_p["attn"]["wo"], o, spec)
     hin = common.norm_apply(layer_p["ln2"], h, cfg)
     captures["mlp/up"] = captures["mlp/gate"] = hin
-    up = linear.apply(layer_p["mlp"]["up"], hin, spec, mode=mode)
+    up = linear.apply(layer_p["mlp"]["up"], hin, spec)
     if "gate" in layer_p["mlp"]:
-        gate = linear.apply(layer_p["mlp"]["gate"], hin, spec, mode=mode)
+        gate = linear.apply(layer_p["mlp"]["gate"], hin, spec)
         act = jax.nn.silu(gate) * up
     else:
         act = jax.nn.gelu(up)
     captures["mlp/down"] = act
-    h = h + linear.apply(layer_p["mlp"]["down"], act, spec, mode=mode)
+    h = h + linear.apply(layer_p["mlp"]["down"], act, spec)
     return captures, h
 
 

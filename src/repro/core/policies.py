@@ -21,10 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import lora, peqa, qat
-
-
-def _path_str(kp) -> str:
-    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+from repro.core.treepath import path_str as _path_str
 
 
 def _mask(params, pred) -> dict:

@@ -15,12 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.treepath import path_str as _path_str
 
 SCALE_KEYS = ("scale", "zero")
-
-
-def _path_str(kp) -> str:
-    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
 
 
 def extract_scales(params: dict, include_zero: bool = False) -> Dict[str, np.ndarray]:

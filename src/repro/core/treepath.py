@@ -1,0 +1,12 @@
+"""Canonical key-path formatting for param trees.
+
+Every path-keyed subsystem (sharding rules, ScaleBank task scales, tuning
+masks) must agree on the same string for the same leaf — one formatter,
+imported everywhere, so they can never drift.
+"""
+from __future__ import annotations
+
+
+def path_str(kp) -> str:
+    """jax key-path → 'a/b/c' (DictKey.key, SequenceKey.idx, else str)."""
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)

@@ -1,0 +1,16 @@
+"""repro.dist — the distribution subsystem.
+
+Three modules, one contract:
+
+  * ``context``      — the mesh context (axis roles + thread-local scope +
+                       activation sharding constraints).  Models call
+                       ``constrain_tokens``; it is a no-op outside a mesh
+                       scope so the same code runs on a laptop CPU.
+  * ``sharding``     — path-based PartitionSpec rules for (quantized) param
+                       trees: where frozen integer codes, trainable PEQA
+                       scales, LoRA factors, MoE experts and SSM leaves live
+                       on the mesh.  See docs/DIST.md for the rule table.
+  * ``pipeline_par`` — GPipe-style pipeline parallelism over
+                       ``shard_map`` + ``ppermute`` (differentiable).
+"""
+from repro.dist import context, pipeline_par, sharding  # noqa: F401

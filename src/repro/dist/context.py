@@ -1,0 +1,112 @@
+"""Mesh context: axis roles, a thread-local scope, activation constraints.
+
+The rest of the codebase never touches raw mesh axis names.  It asks the
+context three questions:
+
+  * which axes carry the batch (``ctx.data_axes`` — ``("data",)`` on one
+    pod, ``("pod", "data")`` on the DCN-connected multi-pod mesh, so batch
+    sharding automatically spans pods),
+  * which axis carries Megatron-style tensor parallelism
+    (``ctx.model_axis``),
+  * what layout token activations should be constrained to
+    (``constrain_tokens`` — the Megatron-SP layout: batch over data axes,
+    sequence over the model axis).
+
+``use_mesh(ctx)`` installs the context in a THREAD-LOCAL stack; model code
+reads it via ``current()``.  Everything degrades to a no-op with no context
+installed, which is what keeps CPU unit tests and the examples mesh-free
+while the 512-device dry-run traces the very same model functions.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_tls = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    mesh: Mesh
+    data_axes: Tuple[str, ...]
+    model_axis: str
+
+    @property
+    def axis_sizes(self) -> dict:
+        return dict(self.mesh.shape)
+
+    @property
+    def data_size(self) -> int:
+        sizes = self.axis_sizes
+        n = 1
+        for a in self.data_axes:
+            n *= sizes[a]
+        return n
+
+    @property
+    def model_size(self) -> int:
+        return self.axis_sizes[self.model_axis]
+
+
+def make_ctx(mesh: Mesh, *, model_axis: str = "model") -> MeshContext:
+    """Classify mesh axes into (data..., model).
+
+    Every non-model axis carries batch — on the multi-pod mesh
+    ``("pod", "data", "model")`` that means ``data_axes == ("pod", "data")``
+    and GSPMD emits hierarchical (ICI-then-DCN) gradient reductions from the
+    axis order alone.
+    """
+    names = tuple(mesh.axis_names)
+    if model_axis not in names:
+        raise ValueError(
+            f"mesh axes {names} have no {model_axis!r} axis; pass "
+            "model_axis= explicitly (silently picking one would invert "
+            "the batch/tensor-parallel roles)")
+    data_axes = tuple(a for a in names if a != model_axis)
+    return MeshContext(mesh=mesh, data_axes=data_axes, model_axis=model_axis)
+
+
+@contextlib.contextmanager
+def use_mesh(ctx: MeshContext):
+    """Install ``ctx`` for the current thread (re-entrant)."""
+    stack = getattr(_tls, "stack", None)
+    if stack is None:
+        stack = _tls.stack = []
+    stack.append(ctx)
+    try:
+        yield ctx
+    finally:
+        stack.pop()
+
+
+def current() -> Optional[MeshContext]:
+    stack = getattr(_tls, "stack", None)
+    return stack[-1] if stack else None
+
+
+def constrain_tokens(h: jax.Array, seq_shard: bool = True) -> jax.Array:
+    """Constrain token activations (B, S, ...) to the Megatron-SP layout.
+
+    Batch over the data axes, sequence over the model axis (when
+    ``seq_shard`` and the extents divide), trailing dims replicated.  A
+    no-op outside a mesh scope, and per-dim a no-op whenever the extent
+    does not divide its axes (decode steps with S == 1, odd CPU-test
+    batches) — so callers sprinkle it unconditionally.
+    """
+    ctx = current()
+    if ctx is None or h.ndim < 2:
+        return h
+    parts = [None] * h.ndim
+    if h.shape[0] % ctx.data_size == 0:
+        parts[0] = ctx.data_axes
+    if seq_shard and h.shape[1] > 1 and h.shape[1] % ctx.model_size == 0:
+        parts[1] = ctx.model_axis
+    if all(p is None for p in parts):
+        return h
+    return jax.lax.with_sharding_constraint(
+        h, NamedSharding(ctx.mesh, P(*parts)))

@@ -1,0 +1,146 @@
+"""Path-based partition rules for (quantized) param trees.
+
+One function — ``spec_for_path(path, ndim)`` — decides where every leaf of
+every architecture lives on the mesh, keyed on the leaf name and its parent
+module name, never on tree position (so it works on full stacked trees,
+layer-sliced subtrees inside ``shard_map``, and abstract
+``ShapeDtypeStruct`` trees alike).
+
+The PEQA-specific part (docs/DIST.md has the full table):
+
+  * Column-parallel linears (wq/wk/wv/up/gate/…) shard the OUTPUT dim.
+    Their packed codes ``qw`` (out, in/8) and per-group ``scale``/``zero``
+    (out, G) carry the output dim at position -2, so all three leaves use
+    the same rule and each model shard holds the scales for exactly the
+    rows it owns — a PEQA task swap (ScaleBank) touches only local bytes.
+  * Row-parallel linears (wo/down/out_proj) shard the INPUT (contraction)
+    dim — the last dim of both ``w`` (out, in) and ``qw`` (out, in/8)
+    (4-bit codes pack 8-per-uint32 along the input dim, so the packed
+    extent still divides any axis the fp extent divides).  Their
+    ``scale``/``zero`` however are (out, G) — per-OUTPUT-row groups with no
+    input dim to slice — so they replicate; at G ≤ in/group_size per row
+    this is the cheapest correct layout and keeps the dequant epilogue
+    local to each shard's partial sums.
+  * Stacked MoE experts: tensor-parallel layouts shard d_ff inside every
+    expert (same column/row rules, one extra leading dim); expert-parallel
+    layouts (``experts_ep``) shard the EXPERT dim itself for every leaf,
+    including scales — each shard owns its experts' scales outright.
+  * Embeddings / lm_head shard the vocab dim; norms, routers, LoRA ``a``
+    factors, positional tables and the tiny xLSTM scalar-gate projections
+    replicate.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.treepath import path_str as _path_str
+
+MODEL_AXIS = "model"
+
+# linears that shard the contraction (input) dim — their outputs are the
+# partial sums GSPMD reduces once per block (Megatron layout)
+ROW_PARALLEL = ("wo", "down", "out_proj")
+
+# modules that stay replicated wholesale: routers must see every token's
+# full logits; sr/sb are sLSTM per-head recurrences (block-diagonal, tiny);
+# gi/gf/sw are scalar-gate projections whose output extent (n_heads, 4·d)
+# is either indivisible or too small to be worth a collective
+REPLICATED_MODULES = ("router", "sr", "sb", "gi", "gf", "sw")
+
+# per-head SSM vectors: shard the trailing heads dim alongside the
+# head-sharded x/z projections so the SSD scan stays shard-local
+HEAD_VECTOR_LEAVES = ("A_log", "ssm_D", "dt_bias")
+
+_LINEAR_LEAVES = ("w", "qw", "scale", "zero", "b")
+
+
+def _mk(ndim: int, axis_at: int) -> P:
+    """PartitionSpec with MODEL_AXIS at ``axis_at``, trailing Nones trimmed."""
+    if axis_at < 0 or axis_at >= ndim:
+        return P()
+    return P(*([None] * axis_at), MODEL_AXIS)
+
+
+def _is_norm(name: str) -> bool:
+    return name.startswith("ln") or "norm" in name
+
+
+def spec_for_path(path: str, ndim: int) -> P:
+    """PartitionSpec for the leaf at ``path`` with ``ndim`` dims.
+
+    Rules are relative to the TRAILING dims, so any number of leading stack
+    dims (layers, zamba groups, experts) is absorbed automatically.
+    """
+    parts = [p for p in path.split("/") if p]
+    leaf = parts[-1] if parts else ""
+    parent = parts[-2] if len(parts) >= 2 else ""
+
+    if any(p in REPLICATED_MODULES for p in parts):
+        return P()
+
+    if "experts_ep" in parts:
+        # expert-parallel: shard the expert dim for EVERY leaf — including
+        # LoRA factors and scales, so each shard owns its experts outright
+        # (must match moe.apply's shard_map in_specs).  The expert dim sits
+        # just before the leaf's own trailing dims: 1 for bias/norm vectors,
+        # 2 for w/qw/scale/zero/lora_a/lora_b.
+        trailing = 1 if leaf in ("b", "g") else 2
+        return _mk(ndim, ndim - trailing - 1)
+
+    if leaf == "emb":                       # (vocab, d) — vocab-sharded
+        return _mk(ndim, ndim - 2)
+    if leaf in ("pos", "lora_a") or leaf == "g" or (leaf == "b"
+                                                    and _is_norm(parent)):
+        return P()
+    if leaf in HEAD_VECTOR_LEAVES:          # (…, n_heads)
+        return _mk(ndim, ndim - 1)
+    if leaf == "lora_b":                    # (…, out, r) — follow out dim
+        return _mk(ndim, ndim - 2)
+
+    if leaf in _LINEAR_LEAVES:
+        if parent in ROW_PARALLEL:
+            if leaf in ("w", "qw"):         # (…, out, in) — shard input
+                return _mk(ndim, ndim - 1)
+            return P()                      # scale/zero/b: per-out-row
+        if leaf == "b":                     # column bias follows the output
+            return _mk(ndim, ndim - 1)
+        return _mk(ndim, ndim - 2)          # w/qw/scale/zero: shard output
+
+    return P()
+
+
+def param_specs(tree) -> dict:
+    """PartitionSpec pytree mirroring ``tree`` (works on abstract trees)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: spec_for_path(_path_str(kp), len(leaf.shape)), tree)
+
+
+def validate_for_mesh(tree, mesh) -> List[str]:
+    """Check every sharded dim divides its mesh axes; return problem strings
+    (empty list == coherent).  Runs on abstract trees — no allocation."""
+    sizes = dict(mesh.shape)
+    problems: List[str] = []
+
+    def check(kp, leaf):
+        path = _path_str(kp)
+        spec = spec_for_path(path, len(leaf.shape))
+        for dim, ax in enumerate(tuple(spec)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = 1
+            for a in axes:
+                if a not in sizes:
+                    problems.append(f"{path}: axis {a!r} not in mesh "
+                                    f"{tuple(mesh.axis_names)}")
+                    return
+                total *= sizes[a]
+            if leaf.shape[dim] % total:
+                problems.append(f"{path}: dim {dim} = {leaf.shape[dim]} "
+                                f"not divisible by {total} ({ax})")
+
+    jax.tree_util.tree_map_with_path(check, tree)
+    return problems

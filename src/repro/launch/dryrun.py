@@ -200,7 +200,11 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
+    if isinstance(mem, (list, tuple)):    # older jax: one entry per device
+        mem = mem[0] if mem else None
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     from repro.launch import hlo_stats
     hlo = hlo_stats.analyze(compiled.as_text())
     record.update(

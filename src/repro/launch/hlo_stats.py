@@ -215,11 +215,20 @@ def analyze(hlo: str, entry: str | None = None) -> dict:
         consumers on TPU and are skipped in the fused byte model."""
         if cname in _ew_fusion_memo:
             return _ew_fusion_memo[cname]
+        _ew_fusion_memo[cname] = False   # cycle guard
         c = comps.get(cname)
-        ok = c is not None and all(
-            o.kind in _ELEMENTWISE or o.kind in _SKIP_KINDS
-            or o.kind == "dynamic-slice"
-            for o in c.ops)
+
+        def _op_ok(o):
+            if o.kind in _ELEMENTWISE or o.kind in _SKIP_KINDS \
+                    or o.kind == "dynamic-slice":
+                return True
+            # XLA CPU wraps parallel loop fusions in call/fusion shells
+            # (e.g. %parallel_broadcast_multiply_fusion) — look through them
+            if o.kind in ("fusion", "call") and o.callees:
+                return _elementwise_only(o.callees[0])
+            return False
+
+        ok = c is not None and all(_op_ok(o) for o in c.ops)
         _ew_fusion_memo[cname] = ok
         return ok
 
@@ -238,7 +247,7 @@ def analyze(hlo: str, entry: str | None = None) -> dict:
         producer = idx.get(name)
         chainable = producer is not None and (
             producer.kind in _CHAIN
-            or (producer.kind == "fusion" and producer.callees
+            or (producer.kind in ("fusion", "call") and producer.callees
                 and _elementwise_only(producer.callees[0])))
         if not chainable or depth > 12:
             _stream_memo[key] = own

@@ -60,12 +60,11 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
 
 def _qkv(p, x, cfg: ModelConfig):
     spec = cfg.quant.spec()
-    mode = cfg.tuning.mode
     b, s, _ = x.shape
     dh = cfg.d_head
-    q = linear.apply(p["wq"], x, spec, mode=mode).reshape(b, s, cfg.n_heads, dh)
-    k = linear.apply(p["wk"], x, spec, mode=mode).reshape(b, s, cfg.n_kv_heads, dh)
-    v = linear.apply(p["wv"], x, spec, mode=mode).reshape(b, s, cfg.n_kv_heads, dh)
+    q = linear.apply(p["wq"], x, spec).reshape(b, s, cfg.n_heads, dh)
+    k = linear.apply(p["wk"], x, spec).reshape(b, s, cfg.n_kv_heads, dh)
+    v = linear.apply(p["wv"], x, spec).reshape(b, s, cfg.n_kv_heads, dh)
     return q, k, v
 
 
@@ -82,7 +81,7 @@ def apply_train(p: dict, x: jax.Array, cfg: ModelConfig,
     o = ops.attention(q, k, v, causal=True, window=cfg.swa_window,
                       impl=cfg.attn_impl)
     o = o.reshape(b, s, cfg.n_heads * cfg.d_head)
-    return linear.apply(p["wo"], o, cfg.quant.spec(), mode=cfg.tuning.mode)
+    return linear.apply(p["wo"], o, cfg.quant.spec())
 
 
 def apply_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache_k: jax.Array,
@@ -105,7 +104,7 @@ def apply_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache_k: jax.Array,
     o = ops.attention(q, cache_k, cache_v, causal=True, offset=pos,
                       impl=cfg.attn_impl)
     o = o.reshape(b, 1, cfg.n_heads * cfg.d_head)
-    out = linear.apply(p["wo"], o, cfg.quant.spec(), mode=cfg.tuning.mode)
+    out = linear.apply(p["wo"], o, cfg.quant.spec())
     return out, cache_k, cache_v
 
 
@@ -148,7 +147,7 @@ def apply_decode_q8(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict,
     vf = dequantize_kv(cache["v"], cache["v_scale"], x.dtype)
     o = ops.attention(q, kf, vf, causal=True, offset=pos, impl=cfg.attn_impl)
     o = o.reshape(b, 1, cfg.n_heads * cfg.d_head)
-    out = linear.apply(p["wo"], o, cfg.quant.spec(), mode=cfg.tuning.mode)
+    out = linear.apply(p["wo"], o, cfg.quant.spec())
     return out, cache
 
 
@@ -167,7 +166,7 @@ def apply_prefill(p: dict, x: jax.Array, cfg: ModelConfig, cap: int):
         k = apply_rope(k, pos, freqs)
     o = ops.attention(q, k, v, causal=True, window=cfg.swa_window)
     o = o.reshape(b, s, cfg.n_heads * cfg.d_head)
-    out = linear.apply(p["wo"], o, cfg.quant.spec(), mode=cfg.tuning.mode)
+    out = linear.apply(p["wo"], o, cfg.quant.spec())
     ck = jnp.roll(k[:, s - cap:], s % cap, axis=1).astype(x.dtype)
     cv = jnp.roll(v[:, s - cap:], s % cap, axis=1).astype(x.dtype)
     return out, ck, cv
@@ -194,13 +193,12 @@ def cross_apply(p: dict, x: jax.Array, enc: jax.Array, cfg: ModelConfig
                 ) -> jax.Array:
     """x: (B, S, d) decoder states; enc: (B, T, d) encoder output."""
     spec = cfg.quant.spec()
-    mode = cfg.tuning.mode
     b, s, _ = x.shape
     t = enc.shape[1]
     dh = cfg.d_head
-    q = linear.apply(p["wq"], x, spec, mode=mode).reshape(b, s, cfg.n_heads, dh)
-    k = linear.apply(p["wk"], enc, spec, mode=mode).reshape(b, t, cfg.n_kv_heads, dh)
-    v = linear.apply(p["wv"], enc, spec, mode=mode).reshape(b, t, cfg.n_kv_heads, dh)
+    q = linear.apply(p["wq"], x, spec).reshape(b, s, cfg.n_heads, dh)
+    k = linear.apply(p["wk"], enc, spec).reshape(b, t, cfg.n_kv_heads, dh)
+    v = linear.apply(p["wv"], enc, spec).reshape(b, t, cfg.n_kv_heads, dh)
     o = ops.attention(q, k, v, causal=False)
     o = o.reshape(b, s, cfg.n_heads * dh)
-    return linear.apply(p["wo"], o, spec, mode=mode)
+    return linear.apply(p["wo"], o, spec)

@@ -75,14 +75,13 @@ def mlp_init(rng, cfg: ModelConfig, d_in: int | None = None,
 
 def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     spec = cfg.quant.spec()
-    mode = cfg.tuning.mode
-    up = linear.apply(p["up"], x, spec, mode=mode)
+    up = linear.apply(p["up"], x, spec)
     if "gate" in p:
-        gate = linear.apply(p["gate"], x, spec, mode=mode)
+        gate = linear.apply(p["gate"], x, spec)
         h = jax.nn.silu(gate) * up
     else:
         h = jax.nn.gelu(up)
-    return linear.apply(p["down"], h, spec, mode=mode)
+    return linear.apply(p["down"], h, spec)
 
 
 # ---------------------------------------------------------------------------
@@ -110,7 +109,7 @@ def head_apply(p_head: dict, p_embed: dict, x: jax.Array, cfg: ModelConfig
     if cfg.tie_embeddings:
         return jnp.einsum("...d,vd->...v", x, p_embed["emb"].astype(x.dtype),
                           preferred_element_type=jnp.float32)
-    y = linear.apply(p_head["lm_head"], x, cfg.quant.spec(), mode=cfg.tuning.mode)
+    y = linear.apply(p_head["lm_head"], x, cfg.quant.spec())
     return y.astype(jnp.float32)
 
 

@@ -65,7 +65,7 @@ def _fake_quant(w, scale, zero, spec: QuantSpec):
     return (s * (q - z)).reshape(n, m)
 
 
-def apply(p: dict, x: jax.Array, spec: QuantSpec, *, mode: str = "peqa",
+def apply(p: dict, x: jax.Array, spec: QuantSpec, *,
           lora_scale: float = 1.0, impl: Optional[str] = None,
           bf16_reduce: bool = False) -> jax.Array:
     """y = x W^T (+b) (+LoRA), storage-mode dispatched on present keys.

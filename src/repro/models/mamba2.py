@@ -84,15 +84,14 @@ def _conv1d_causal(x, w, b):
 
 def _gates(p, u, cfg: ModelConfig):
     spec = cfg.quant.spec()
-    mode = cfg.tuning.mode
     ssm = cfg.ssm
     b, s, _ = u.shape
     d_inner, n_heads = _dims(cfg)
-    z = linear.apply(p["zproj"], u, spec, mode=mode)
-    x = linear.apply(p["xproj"], u, spec, mode=mode)
-    bb = linear.apply(p["bproj"], u, spec, mode=mode).reshape(b, s, ssm.n_groups, ssm.d_state)
-    cc = linear.apply(p["cproj"], u, spec, mode=mode).reshape(b, s, ssm.n_groups, ssm.d_state)
-    dt_raw = linear.apply(p["dtproj"], u, spec, mode=mode)
+    z = linear.apply(p["zproj"], u, spec)
+    x = linear.apply(p["xproj"], u, spec)
+    bb = linear.apply(p["bproj"], u, spec).reshape(b, s, ssm.n_groups, ssm.d_state)
+    cc = linear.apply(p["cproj"], u, spec).reshape(b, s, ssm.n_groups, ssm.d_state)
+    dt_raw = linear.apply(p["dtproj"], u, spec)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
     return z, x, bb, cc, dt
 
@@ -178,7 +177,7 @@ def apply_train(p: dict, u: jax.Array, cfg: ModelConfig,
     y = y.reshape(bsz, s, d_inner).astype(u.dtype)
     y = y * jax.nn.silu(z)
     y = common.norm_apply(p["gnorm"], y, cfg)
-    out = linear.apply(p["out_proj"], y, cfg.quant.spec(), mode=cfg.tuning.mode)
+    out = linear.apply(p["out_proj"], y, cfg.quant.spec())
     if return_state:
         # decode's rolling conv window holds PRE-conv xproj outputs
         tail = ssm.d_conv - 1
@@ -217,5 +216,5 @@ def apply_decode(p: dict, u: jax.Array, cfg: ModelConfig,
     y = y.reshape(bsz, 1, d_inner).astype(u.dtype)
     y = y * jax.nn.silu(z)
     y = common.norm_apply(p["gnorm"], y, cfg)
-    out = linear.apply(p["out_proj"], y, cfg.quant.spec(), mode=cfg.tuning.mode)
+    out = linear.apply(p["out_proj"], y, cfg.quant.spec())
     return out, S, new_conv

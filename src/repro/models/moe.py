@@ -35,6 +35,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -242,10 +243,11 @@ def apply(p: dict, x: jax.Array, cfg: ModelConfig):
     fn = partial(_moe_local, cfg=cfg, model_axis=m,
                  data_axes=dp if batch_sharded else (),
                  seq_sharded=seq_sharded)
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         lambda pp, xx: fn(pp, xx),
         mesh=ctx.mesh,
         in_specs=(in_specs_p, x_spec),
         out_specs=(x_spec, P()),
+        check_rep=False,
     )(p, x)
     return y, aux

@@ -75,8 +75,7 @@ def encode(params: dict, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
         from repro.models import linear
         o = ops.attention(q, k, v, causal=False)
         o = o.reshape(*h.shape[:2], cfg.n_heads * cfg.d_head)
-        h = h + linear.apply(layer_p["attn"]["wo"], o, cfg.quant.spec(),
-                             mode=cfg.tuning.mode)
+        h = h + linear.apply(layer_p["attn"]["wo"], o, cfg.quant.spec())
         h = h + common.mlp_apply(layer_p["mlp"],
                                  common.norm_apply(layer_p["ln2"], h, cfg), cfg)
         return h, None
@@ -141,18 +140,18 @@ def prefill(params: dict, frames: jax.Array, tokens: jax.Array,
         hin = common.norm_apply(layer_p["ln2"], h, cfg)
         # cross K/V computed once, cached
         from repro.models import linear
-        spec, mode = cfg.quant.spec(), cfg.tuning.mode
+        spec = cfg.quant.spec()
         t = enc_out.shape[1]
-        xk = linear.apply(layer_p["xattn"]["wk"], enc_out, spec, mode=mode
+        xk = linear.apply(layer_p["xattn"]["wk"], enc_out, spec
                           ).reshape(b, t, cfg.n_kv_heads, cfg.d_head)
-        xv = linear.apply(layer_p["xattn"]["wv"], enc_out, spec, mode=mode
+        xv = linear.apply(layer_p["xattn"]["wv"], enc_out, spec
                           ).reshape(b, t, cfg.n_kv_heads, cfg.d_head)
         from repro.kernels import ops
-        q = linear.apply(layer_p["xattn"]["wq"], hin, spec, mode=mode
+        q = linear.apply(layer_p["xattn"]["wq"], hin, spec
                          ).reshape(b, s, cfg.n_heads, cfg.d_head)
         o = ops.attention(q, xk, xv, causal=False)
         o = o.reshape(b, s, cfg.n_heads * cfg.d_head)
-        h = h + linear.apply(layer_p["xattn"]["wo"], o, spec, mode=mode)
+        h = h + linear.apply(layer_p["xattn"]["wo"], o, spec)
         h = h + common.mlp_apply(
             layer_p["mlp"], common.norm_apply(layer_p["ln3"], h, cfg), cfg)
         return h, {"k": ck, "v": cv, "xk": xk.astype(h.dtype),
@@ -190,12 +189,12 @@ def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
         hin = common.norm_apply(layer_p["ln2"], h, cfg)
         from repro.models import linear
         from repro.kernels import ops
-        spec, mode = cfg.quant.spec(), cfg.tuning.mode
-        q = linear.apply(layer_p["xattn"]["wq"], hin, spec, mode=mode
+        spec = cfg.quant.spec()
+        q = linear.apply(layer_p["xattn"]["wq"], hin, spec
                          ).reshape(b, 1, cfg.n_heads, cfg.d_head)
         o = ops.attention(q, xk, xv, causal=False)
         o = o.reshape(b, 1, cfg.n_heads * cfg.d_head)
-        h = h + linear.apply(layer_p["xattn"]["wo"], o, spec, mode=mode)
+        h = h + linear.apply(layer_p["xattn"]["wo"], o, spec)
         h = h + common.mlp_apply(
             layer_p["mlp"], common.norm_apply(layer_p["ln3"], h, cfg), cfg)
         return h, {"k": ck, "v": cv}

@@ -63,21 +63,20 @@ def mlstm_init(rng, cfg: ModelConfig) -> dict:
 
 def _mlstm_gates(p, u, cfg: ModelConfig):
     spec = cfg.quant.spec()
-    mode = cfg.tuning.mode
     b, s, _ = u.shape
     d_inner, hd = _dims(cfg)
     h = cfg.n_heads
 
     def proj(name, dim, dh):
-        return linear.apply(p[name], u, spec, mode=mode).reshape(b, s, dim, dh)
+        return linear.apply(p[name], u, spec).reshape(b, s, dim, dh)
 
     q = proj("wq", h, hd).astype(jnp.float32) * hd ** -0.5
     k = proj("wk", h, hd).astype(jnp.float32) * hd ** -0.5
     v = proj("wv", h, hd).astype(jnp.float32)
-    og = jax.nn.sigmoid(linear.apply(p["gate"], u, spec, mode=mode)
+    og = jax.nn.sigmoid(linear.apply(p["gate"], u, spec)
                         .astype(jnp.float32))
-    i_raw = linear.apply(p["gi"], u, spec, mode=mode).astype(jnp.float32)
-    f_raw = linear.apply(p["gf"], u, spec, mode=mode).astype(jnp.float32)
+    i_raw = linear.apply(p["gi"], u, spec).astype(jnp.float32)
+    f_raw = linear.apply(p["gf"], u, spec).astype(jnp.float32)
     ig = jnp.exp(jnp.clip(i_raw, -ICLIP, ICLIP))                  # (B,S,H)
     logf = jax.nn.log_sigmoid(f_raw)                              # (B,S,H)
     return q, k, v, og, ig, logf
@@ -100,7 +99,7 @@ def mlstm_apply_train(p: dict, u_res: jax.Array, cfg: ModelConfig,
     y, nq = y_aug[..., :hd], y_aug[..., hd]
     y = y / jnp.maximum(jnp.abs(nq), 1.0)[..., None]
     y = (y.reshape(b, s, d_inner) * og).astype(u_res.dtype)
-    out = linear.apply(p["down"], y, cfg.quant.spec(), mode=cfg.tuning.mode)
+    out = linear.apply(p["down"], y, cfg.quant.spec())
     if return_state:
         return out, S_last
     return out
@@ -122,8 +121,7 @@ def mlstm_apply_decode(p: dict, u_res: jax.Array, cfg: ModelConfig,
     y, nq = y_aug[..., :hd], y_aug[..., hd]
     y = y / jnp.maximum(jnp.abs(nq), 1.0)[..., None]
     y = y.reshape(b, 1, d_inner) * og[:, None]
-    out = linear.apply(p["down"], y.astype(u_res.dtype), cfg.quant.spec(),
-                       mode=cfg.tuning.mode)
+    out = linear.apply(p["down"], y.astype(u_res.dtype), cfg.quant.spec())
     return out, S
 
 
@@ -153,7 +151,7 @@ def slstm_apply_train(p: dict, u_res: jax.Array, cfg: ModelConfig,
     h = cfg.n_heads
     hd = d // h
     u = common.norm_apply(p["ln"], u_res, cfg)
-    wx = linear.apply(p["sw"], u, cfg.quant.spec(), mode=cfg.tuning.mode)
+    wx = linear.apply(p["sw"], u, cfg.quant.spec())
     wx = wx.astype(jnp.float32).reshape(b, s, 4, h, hd) + \
         p["sb"]["b"].reshape(4, h, hd)
     r = p["sr"]["r"]
@@ -180,7 +178,7 @@ def slstm_apply_train(p: dict, u_res: jax.Array, cfg: ModelConfig,
     wx_t = jnp.swapaxes(wx, 0, 1)                                 # (S,B,4,H,hd)
     carry, ys = jax.lax.scan(step, state, wx_t)
     y = jnp.swapaxes(ys, 0, 1).reshape(b, s, d).astype(u_res.dtype)
-    out = linear.apply(p["down"], y, cfg.quant.spec(), mode=cfg.tuning.mode)
+    out = linear.apply(p["down"], y, cfg.quant.spec())
     if return_state:
         return out, carry
     return out

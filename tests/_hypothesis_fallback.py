@@ -1,0 +1,72 @@
+"""Minimal deterministic stand-in for `hypothesis` (not installed in the CI
+image; pip installs are not allowed).  Implements just what the tier-1 tests
+use: ``given`` + ``settings`` + ``strategies.integers/floats`` with ``.map``.
+
+Each ``@given`` test runs ``max_examples`` deterministic draws (seeded RNG),
+always starting from the strategy bounds so the classic boundary cases
+hypothesis would try first are covered.  Shrinking/replay are intentionally
+out of scope.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw, bounds=()):
+        self._draw = draw          # rng -> value
+        self._bounds = tuple(bounds)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)),
+                         [fn(b) for b in self._bounds])
+
+    def example_stream(self, rng):
+        yield from self._bounds
+        while True:
+            yield self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                     (min_value, max_value))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                     (min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements), elements)
+
+
+st = strategies = types.SimpleNamespace(
+    integers=integers, floats=floats, sampled_from=sampled_from)
+
+
+def settings(max_examples: int = 20, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # NOT functools.wraps: pytest must see the wrapper's bare (*args)
+        # signature, or it treats the strategy parameters as fixtures
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples", 20))
+            rng = random.Random(0)
+            streams = [s.example_stream(rng) for s in strats]
+            for _ in range(n):
+                fn(*args, *[next(s) for s in streams], **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

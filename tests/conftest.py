@@ -1,0 +1,13 @@
+"""Shared test helpers."""
+import os
+import sys
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+
+
+def subproc_env() -> dict:
+    """Env for subprocess tests: repo src on the path, CPU pinned (a libtpu
+    is present in some images and every fresh process would otherwise burn
+    ~2 min failing TPU init before falling back)."""
+    return {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+            "HOME": os.environ.get("HOME", "/root"), "JAX_PLATFORMS": "cpu"}

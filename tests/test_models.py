@@ -184,7 +184,10 @@ def test_moe_capacity_drops_are_bounded():
     assert float(aux) > 0.5  # Switch aux ≈ 1 for near-uniform routing
 
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:        # image has no hypothesis; see fallback
+    from _hypothesis_fallback import given, settings, st
 
 
 @given(st.integers(0, 10_000), st.integers(1, 3), st.sampled_from([2, 4, 8]))

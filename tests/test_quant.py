@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:        # image has no hypothesis; see fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.quant import (PACK, QTensor, QuantSpec, dequantize,
                               pack_codes, quant_error, rtn_quantize,

@@ -1,0 +1,110 @@
+"""ScaleBank disk persistence: the PEQA task-swap story must survive a
+process restart — save scales in one process, load them from disk in a
+FRESH python process, and get bit-identical params back."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import subproc_env
+from repro import configs
+from repro.configs.base import TuningConfig
+from repro.core import policies
+from repro.core.scale_bank import ScaleBank, apply_scales, extract_scales
+from repro.models import registry
+
+
+def _tiny_peqa_params():
+    """Deterministic tiny PEQA tree (jax PRNG is cross-process stable)."""
+    cfg = configs.paper_lm(n_layers=1, d_model=32, n_heads=2, d_ff=64,
+                           vocab=64).replace(tuning=TuningConfig(mode="peqa"))
+    api = registry.build(cfg)
+    return policies.transform(api.init(jax.random.PRNGKey(0)), cfg,
+                              jax.random.PRNGKey(0))
+
+
+def _bump_scales(params, factor):
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, l: l * factor if str(getattr(kp[-1], "key", "")) == "scale"
+        else l, params)
+
+
+def test_roundtrip_same_process(tmp_path):
+    params = _tiny_peqa_params()
+    bank = ScaleBank(root=str(tmp_path))
+    bank.add("base", params)
+    bank.add("taskA", _bump_scales(params, 2.0))
+    assert set(bank.names()) == {"base", "taskA"}
+    assert bank.nbytes("taskA") > 0
+
+    switched = bank.switch(params, "taskA")
+    for path, expect in bank.tasks["taskA"].items():
+        got = extract_scales(switched)[path]
+        np.testing.assert_array_equal(got, expect)
+    # non-scale leaves untouched (frozen integer backbone shared)
+    assert switched["layers"]["attn"]["wq"]["qw"] is \
+        params["layers"]["attn"]["wq"]["qw"]
+    # switching back restores the originals exactly
+    restored = bank.switch(switched, "base")
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+_CHILD = textwrap.dedent("""
+    import jax, numpy as np
+    from repro import configs
+    from repro.configs.base import TuningConfig
+    from repro.core import policies
+    from repro.core.scale_bank import ScaleBank, extract_scales
+    from repro.models import registry
+
+    cfg = configs.paper_lm(n_layers=1, d_model=32, n_heads=2, d_ff=64,
+                           vocab=64).replace(tuning=TuningConfig(mode="peqa"))
+    api = registry.build(cfg)
+    params = policies.transform(api.init(jax.random.PRNGKey(0)), cfg,
+                                jax.random.PRNGKey(0))
+    bank = ScaleBank(root=%r)               # fresh-process load from .npz
+    assert set(bank.names()) == {"base", "taskA"}, bank.names()
+    switched = bank.switch(params, "taskA")
+    got = extract_scales(switched)
+    base = extract_scales(params)
+    changed = 0
+    for path, expect in bank.tasks["taskA"].items():
+        np.testing.assert_array_equal(got[path], expect)
+        changed += int(not np.array_equal(got[path], base[path]))
+    assert changed > 0, "taskA must actually differ from the base scales"
+    print("CHILD_OK")
+""")
+
+
+def test_roundtrip_fresh_process(tmp_path):
+    params = _tiny_peqa_params()
+    bank = ScaleBank(root=str(tmp_path))
+    bank.add("base", params)
+    bank.add("taskA", _bump_scales(params, 2.0))
+
+    res = subprocess.run(
+        [sys.executable, "-c", _CHILD % str(tmp_path)],
+        capture_output=True, text=True, timeout=300,
+        env=subproc_env())
+    assert "CHILD_OK" in res.stdout, res.stderr[-3000:]
+
+
+def test_shape_mismatch_raises(tmp_path):
+    params = _tiny_peqa_params()
+    bank = ScaleBank(root=str(tmp_path))
+    bank.add("taskA", params)
+    bad = {path: np.concatenate([a, a], axis=0)
+           for path, a in bank.tasks["taskA"].items()}
+    with pytest.raises(ValueError, match="shape mismatch"):
+        apply_scales(params, bad)
+
+
+def test_switch_unknown_task_raises():
+    bank = ScaleBank()
+    with pytest.raises(KeyError, match="no task"):
+        bank.switch({}, "nope")

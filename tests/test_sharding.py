@@ -17,6 +17,8 @@ from repro.core import policies
 from repro.dist import sharding as sh
 from repro.models import registry
 
+from conftest import subproc_env
+
 
 def test_spec_rules_dense():
     assert sh.spec_for_path("layers/attn/wq/w", 3) == P(None, "model")
@@ -105,7 +107,10 @@ _SUBPROC_TEST = textwrap.dedent("""
                                        state_example=astate,
                                        batch_example=batch)
         compiled = ts.lower(astate, batch).compile()
-    assert compiled.cost_analysis().get("flops", 0) > 0
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per device
+        cost = cost[0]
+    assert cost.get("flops", 0) > 0
     # MoE expert-parallel decode also compiles
     cfgm = cfg.replace(name="m", family="moe", d_ff=64,
                        moe=MoEConfig(n_experts=8, top_k=2,
@@ -137,8 +142,7 @@ def test_sharded_compile_subprocess():
     """Train-step + MoE decode lower&compile on a (2,4) host-device mesh."""
     res = subprocess.run([sys.executable, "-c", _SUBPROC_TEST],
                          capture_output=True, text=True, timeout=900,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                         env=subproc_env())
     assert "SUBPROC_OK" in res.stdout, res.stderr[-3000:]
 
 
@@ -175,6 +179,5 @@ def test_pipeline_parallel_subprocess():
     """GPipe over shard_map+ppermute matches the sequential scan (fwd+bwd)."""
     res = subprocess.run([sys.executable, "-c", _PP_TEST],
                          capture_output=True, text=True, timeout=600,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                         env=subproc_env())
     assert "SUBPROC_OK" in res.stdout, res.stderr[-3000:]
