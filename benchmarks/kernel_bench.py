@@ -5,6 +5,12 @@
   * CPU wall-time sanity of the jitted XLA paths (quantized vs fp matmul).
   * Task-switch latency: ScaleBank swap vs full-model reload (paper's
     "fast task switching" row of Table 1).
+  * Sharded serving: per-shard ScaleBank swaps + shard-local logitshard
+    sampling on a (data, model) mesh — bytes moved and wall time vs the
+    replicated baseline, plus the HLO guards the serve-smoke CI job runs
+    (``python -m benchmarks.kernel_bench --check-sharded`` exits non-zero
+    on any sharding problem, swap resharding collective, or vocab
+    all-gather in the logitshard decode step).
 """
 from __future__ import annotations
 
@@ -17,6 +23,7 @@ import numpy as np
 from repro import configs
 from repro.configs.base import QuantConfig, TuningConfig
 from repro.core import policies
+from repro.core import scale_bank as sb
 from repro.core.quant import QTensor, QuantSpec
 from repro.core.scale_bank import ScaleBank
 from repro.kernels import ops
@@ -80,7 +87,7 @@ def task_switch(report):
     t0 = time.perf_counter()
     for i in range(10):
         p = bank.switch(p, "B" if i % 2 == 0 else "A")
-    jax.block_until_ready(jax.tree.leaves(p)[0])
+    jax.block_until_ready(p)      # every swapped leaf — honest wall time
     t_switch = (time.perf_counter() - t0) / 10 * 1e6
 
     # full reload = re-device_put the whole tree
@@ -88,7 +95,7 @@ def task_switch(report):
     t0 = time.perf_counter()
     for _ in range(10):
         p2 = jax.tree.map(jnp.asarray, host)
-    jax.block_until_ready(jax.tree.leaves(p2)[0])
+    jax.block_until_ready(p2)
     t_reload = (time.perf_counter() - t0) / 10 * 1e6
 
     total = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(p))
@@ -98,11 +105,148 @@ def task_switch(report):
            f"({100 * bank.nbytes('A') / total:.1f}%)")
 
 
+def _serving_cfg():
+    # vocab must equal NO other extent in the decode HLO: the CI gate
+    # counts all-gathers by the vocab extent, so a d_ff == vocab collision
+    # would let an activation regather masquerade as a logit gather
+    return configs.paper_lm(n_layers=4, d_model=256, n_heads=4, d_ff=384,
+                            vocab=512).replace(
+        tuning=TuningConfig(mode="peqa"), quant=QuantConfig(bits=4, n_grid=2))
+
+
+def sharded_serving(report, check: bool = False) -> bool:
+    """Mesh-native serving microbenchmark + HLO guards.
+
+    Needs ≥ 2 devices (CI fakes 8 CPU devices via XLA_FLAGS); on a single
+    device it reports a skip — except in check mode, where a missing mesh
+    means the CI env is broken and must fail loudly.
+    """
+    from repro.dist import context as dctx
+    from repro.dist import sharding as shard_rules
+    from repro.launch import hlo_stats
+    from repro.train.serve import Engine
+
+    n = jax.device_count()
+    if n < 2:
+        report("kernel/sharded_swap", 0.0,
+               "skipped: 1 device (set XLA_FLAGS="
+               "--xla_force_host_platform_device_count=8)")
+        return not check
+    model = 4 if n % 4 == 0 else 2
+    mesh = jax.make_mesh((n // model, model), ("data", "model"))
+    ctx = dctx.make_ctx(mesh)
+
+    cfg = _serving_cfg()
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p, _ = policies.prepare(api.init(rng), cfg, rng)
+    # host snapshot: device trees below are donated on swap, and device_put
+    # may alias a source buffer that lives on a target device — every
+    # device tree must be built from its own host copy
+    p = jax.tree.map(np.asarray, p)
+    bank = ScaleBank()
+    bank.add("A", p)
+    bank.add("B", jax.tree_util.tree_map_with_path(
+        lambda kp, l: l * 1.01 if str(getattr(kp[-1], "key", "")) == "scale"
+        else l, p))
+
+    ok = True
+    problems = shard_rules.validate_for_mesh(p, mesh)
+    if problems:
+        report("kernel/sharded_swap", 0.0,
+               f"FAIL sharding_problems={problems[:3]}")
+        ok = False
+
+    sp = jax.device_put(p, shard_rules.named_shardings(ctx, p))
+    hlo = sb.swap_hlo(sp, bank.tasks["B"], ctx)
+    coll = hlo_stats.collective_stats(hlo)
+    if coll["total_bytes"] > 0:
+        report("kernel/sharded_swap_hlo", 0.0,
+               f"FAIL resharding collectives in swap HLO: {coll}")
+        ok = False
+
+    # sharded swap: warm the install jit, then time alternating swaps,
+    # blocking on the WHOLE tree (honest wall time)
+    sp = bank.switch(sp, "A", ctx=ctx, donate=True)
+    jax.block_until_ready(sp)
+    t0 = time.perf_counter()
+    for i in range(10):
+        sp = bank.switch(sp, "B" if i % 2 == 0 else "A", ctx=ctx, donate=True)
+    jax.block_until_ready(sp)
+    t_shard = (time.perf_counter() - t0) / 10 * 1e6
+
+    # replicated baseline: the pre-mesh host path on a single-device tree
+    rp = jax.tree.map(jnp.array, p)
+    rp = bank.switch(rp, "A")
+    jax.block_until_ready(rp)
+    t0 = time.perf_counter()
+    for i in range(10):
+        rp = bank.switch(rp, "B" if i % 2 == 0 else "A")
+    jax.block_until_ready(rp)
+    t_repl = (time.perf_counter() - t0) / 10 * 1e6
+
+    local_b, total_b = bank.local_nbytes("A", ctx), bank.nbytes("A")
+    report("kernel/sharded_swap", t_shard,
+           f"sharded={t_shard:.0f}us replicated={t_repl:.0f}us "
+           f"bytes/device={local_b}B of {total_b}B "
+           f"({n // model}x{model} mesh, no swap collectives: "
+           f"{coll['total_bytes'] == 0})")
+
+    # shard-local sampler: logitshard decode must contain NO vocab-extent
+    # all-gather; the replicated baseline shows the one it deletes
+    mk = lambda ls: Engine(
+        api, jax.device_put(p, shard_rules.named_shardings(ctx, p)),
+        bank=bank, ctx=ctx, logitshard=ls)
+    eng_base, eng_ls = mk(False), mk(True)
+    b, cache_len, vocab = 4, 32, cfg.vocab_size
+    ag_base = hlo_stats.allgather_extent_count(
+        eng_base.decode_hlo(b, cache_len), vocab)
+    ag_ls = hlo_stats.allgather_extent_count(
+        eng_ls.decode_hlo(b, cache_len), vocab)
+    if ag_ls:
+        report("kernel/logitshard_hlo", 0.0,
+               f"FAIL {ag_ls} vocab all-gathers in logitshard decode")
+        ok = False
+
+    prompt = jax.device_put(
+        jnp.tile(jnp.arange(8, dtype=jnp.int32)[None], (b, 1)),
+        ctx.sharding())
+    times = {}
+    for name, eng in (("replicated", eng_base), ("logitshard", eng_ls)):
+        jax.block_until_ready(eng.generate(prompt, n_new=8))   # compile+sync
+        t0 = time.perf_counter()
+        jax.block_until_ready(eng.generate(prompt, n_new=8))
+        times[name] = (time.perf_counter() - t0) / 8 * 1e6
+    report("kernel/logitshard_sample", times["logitshard"],
+           f"decode+sample logitshard={times['logitshard']:.0f}us/tok "
+           f"replicated={times['replicated']:.0f}us/tok "
+           f"vocab_allgathers: baseline={ag_base} logitshard={ag_ls}")
+    return ok
+
+
 def run(report):
     traffic_model(report)
     xla_path_walltime(report)
     task_switch(report)
+    sharded_serving(report)
 
 
 if __name__ == "__main__":
-    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"))
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check-sharded", action="store_true",
+                    help="run only the sharded serving bench; exit 1 on "
+                         "sharding problems / swap collectives / vocab "
+                         "all-gathers (the serve-smoke CI gate)")
+    args = ap.parse_args()
+
+    def _report(n, us, d):
+        print(f"{n},{us:.1f},{d}")
+
+    if args.check_sharded:
+        passed = sharded_serving(_report, check=True)
+        print(f"[check-sharded] {'OK' if passed else 'FAILED'}")
+        sys.exit(0 if passed else 1)
+    run(_report)

@@ -5,11 +5,19 @@ One frozen integer backbone, N tasks, each task = {path: scale array}
 pytree update — benchmarks/kernel_bench.py measures it vs full-model reload,
 and train/serve.py uses it to serve multiple PEQA-tuned tasks from one
 backbone in the same batch-serving process.
+
+On a mesh the swap is SHARDED: each scale is ``device_put`` with its
+``dist.sharding`` spec, so every device receives only its local slice
+(column-parallel scales) or one small copy (replicated row-parallel
+scales) — the layout guarantees no resharding collective (docs/DIST.md,
+"Serving").  Installation into the param tree runs as a jitted pass-through
+that DONATES the old tree, so the old scale buffers are freed in place and
+a swap never holds two copies of anything bigger than one scale set.
 """
 from __future__ import annotations
 
 import os
-from typing import Dict, Iterable
+from typing import Dict, Iterable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,30 +29,101 @@ SCALE_KEYS = ("scale", "zero")
 
 
 def extract_scales(params: dict, include_zero: bool = False) -> Dict[str, np.ndarray]:
-    """Pull every quantization scale (the task-specific parameters)."""
+    """Pull every quantization scale (the task-specific parameters).
+
+    Gathers to host numpy — on a mesh this all-gathers each (tiny) scale
+    once at ``add`` time; swaps never call this.
+    """
     keys = SCALE_KEYS if include_zero else ("scale",)
     out = {}
 
     def visit(kp, leaf):
         path = _path_str(kp)
         if path.split("/")[-1] in keys and "qw_sibling" not in path:
-            out[path] = np.asarray(leaf)
+            out[path] = np.asarray(jax.device_get(leaf))
     jax.tree_util.tree_map_with_path(visit, params)
     return out
 
 
-def apply_scales(params: dict, scales: Dict[str, np.ndarray]) -> dict:
-    """Install a task's scales into the (shared-backbone) param tree."""
+def _check_shapes(params: dict, scales: Dict[str, np.ndarray]):
+    def check(kp, leaf):
+        path = _path_str(kp)
+        if path in scales and tuple(scales[path].shape) != tuple(leaf.shape):
+            raise ValueError(f"scale shape mismatch at {path}: "
+                             f"{tuple(scales[path].shape)} vs {leaf.shape}")
+    jax.tree_util.tree_map_with_path(check, params)
+
+
+def _install(params: dict, scales: dict) -> dict:
+    """Replace scale leaves; everything else passes through (aliased under
+    donation).  Pure rewiring — its HLO must contain zero collectives."""
     def replace(kp, leaf):
         path = _path_str(kp)
         if path in scales:
-            new = jnp.asarray(scales[path], dtype=jnp.asarray(leaf).dtype)
-            if new.shape != leaf.shape:
-                raise ValueError(f"scale shape mismatch at {path}: "
-                                 f"{new.shape} vs {leaf.shape}")
-            return new
+            return scales[path].astype(leaf.dtype)
         return leaf
     return jax.tree_util.tree_map_with_path(replace, params)
+
+
+_install_jit = jax.jit(_install)
+_install_jit_donate = jax.jit(_install, donate_argnums=(0,))
+
+
+def put_scales(scales: Dict[str, np.ndarray], ctx) -> dict:
+    """Home a host scale set on the mesh with its partition specs — one
+    BATCHED ``device_put`` so the per-shard local transfers overlap instead
+    of serializing leaf by leaf (this is the swap hot path)."""
+    from repro.dist import sharding as shard_rules
+    shardings = {
+        path: ctx.sharding(*shard_rules.spec_for_path(path, np.ndim(arr)))
+        for path, arr in scales.items()}
+    return jax.device_put({p: np.asarray(a) for p, a in scales.items()},
+                          shardings)
+
+
+def apply_scales(params: dict, scales: Dict[str, np.ndarray],
+                 ctx=None, donate: bool = False) -> dict:
+    """Install a task's scales into the (shared-backbone) param tree.
+
+    Off-mesh (``ctx is None``) this is the original host path: new jnp
+    leaves for the scales, shared references for everything else.  With a
+    ``dist.context.MeshContext`` the scales are ``device_put`` per-spec
+    (local bytes only) and installed by the jitted pass-through;
+    ``donate=True`` additionally donates the old tree so the swap has no
+    transient second copy (callers must own ``params`` outright).
+    """
+    _check_shapes(params, scales)
+    if ctx is None:
+        def replace(kp, leaf):
+            path = _path_str(kp)
+            if path in scales:
+                return jnp.asarray(scales[path],
+                                   dtype=jnp.asarray(leaf).dtype)
+            return leaf
+        return jax.tree_util.tree_map_with_path(replace, params)
+    dev = put_scales(scales, ctx)
+    fn = _install_jit_donate if donate else _install_jit
+    return fn(params, dev)
+
+
+def swap_hlo(params: dict, scales: Dict[str, np.ndarray], ctx) -> str:
+    """Compiled HLO of the sharded install for ``params``/``scales`` —
+    what the serve-smoke CI job and the sharding tests scan for resharding
+    collectives (there must be none: the scale layout is swap-aligned).
+
+    Lowers the DONATED install (the variant the serving hot path runs)
+    against fully abstract inputs — no scale bytes actually move.
+    """
+    from repro.dist import sharding as shard_rules
+    adev = {path: jax.ShapeDtypeStruct(
+                np.shape(arr), np.asarray(arr).dtype,
+                sharding=ctx.sharding(
+                    *shard_rules.spec_for_path(path, np.ndim(arr))))
+            for path, arr in scales.items()}
+    aparams = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=l.sharding)
+        if isinstance(l, jax.Array) else l, params)
+    return _install_jit_donate.lower(aparams, adev).compile().as_text()
 
 
 class ScaleBank:
@@ -65,13 +144,28 @@ class ScaleBank:
         if self.root:
             np.savez(os.path.join(self.root, f"{name}.npz"), **scales)
 
-    def switch(self, params: dict, name: str) -> dict:
+    def switch(self, params: dict, name: str,
+               ctx=None, donate: bool = False) -> dict:
         if name not in self.tasks:
             raise KeyError(f"no task {name!r}; have {list(self.tasks)}")
-        return apply_scales(params, self.tasks[name])
+        return apply_scales(params, self.tasks[name], ctx=ctx, donate=donate)
 
     def nbytes(self, name: str) -> int:
         return sum(a.nbytes for a in self.tasks[name].values())
+
+    def local_nbytes(self, name: str, ctx: Optional[object] = None) -> int:
+        """Bytes one device receives in a swap: sharded scales contribute
+        ``nbytes / model_size``, replicated (row-parallel) scales their full
+        size.  With no ctx this equals ``nbytes`` (single copy)."""
+        if ctx is None:
+            return self.nbytes(name)
+        from repro.dist import sharding as shard_rules
+        total = 0
+        for path, arr in self.tasks[name].items():
+            spec = shard_rules.spec_for_path(path, np.ndim(arr))
+            sharded = any(ax is not None for ax in tuple(spec))
+            total += arr.nbytes // (ctx.model_size if sharded else 1)
+        return total
 
     def names(self) -> Iterable[str]:
         return self.tasks.keys()

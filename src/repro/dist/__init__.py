@@ -1,6 +1,6 @@
 """repro.dist — the distribution subsystem.
 
-Three modules, one contract:
+Four modules, one contract:
 
   * ``context``      — the mesh context (axis roles + thread-local scope +
                        activation sharding constraints).  Models call
@@ -12,5 +12,8 @@ Three modules, one contract:
                        on the mesh.  See docs/DIST.md for the rule table.
   * ``pipeline_par`` — GPipe-style pipeline parallelism over
                        ``shard_map`` + ``ppermute`` (differentiable).
+  * ``sampling``     — shard-local argmax/top-k over vocab-sharded logits
+                       (the ``logitshard`` serving sampler: scalar
+                       max-reduce instead of a vocab all-gather).
 """
-from repro.dist import context, pipeline_par, sharding  # noqa: F401
+from repro.dist import context, pipeline_par, sampling, sharding  # noqa: F401

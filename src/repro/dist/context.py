@@ -52,6 +52,25 @@ class MeshContext:
     def model_size(self) -> int:
         return self.axis_sizes[self.model_axis]
 
+    # ------------------------------------------------------- sharding sugar
+    def sharding(self, *parts) -> NamedSharding:
+        """``NamedSharding(mesh, P(*parts))`` — the one-liner every serving
+        call site needs (scale swaps, logits constraints, token placement)."""
+        return NamedSharding(self.mesh, P(*parts))
+
+    def batch_axes(self, batch: int):
+        """The data axes when ``batch`` divides them, else ``None`` — the
+        batch-dim entry of every activation spec in serving."""
+        return self.data_axes if batch % self.data_size == 0 else None
+
+    def logits_sharding(self, batch: int) -> NamedSharding:
+        """Vocab-sharded logits layout for the ``logitshard`` serving path:
+        (B, V) with V over the model axis, B over the data axes where it
+        divides.  Keeping decode outputs in this layout (instead of
+        replicated) is what deletes the vocab all-gather from the hot path —
+        the shard-local sampler (``dist/sampling.py``) consumes it as-is."""
+        return self.sharding(self.batch_axes(batch), self.model_axis)
+
 
 def make_ctx(mesh: Mesh, *, model_axis: str = "model") -> MeshContext:
     """Classify mesh axes into (data..., model).

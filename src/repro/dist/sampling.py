@@ -1,0 +1,90 @@
+"""Shard-local sampling over vocab-sharded logits.
+
+The ``logitshard`` serving variant keeps decode logits (B, V) sharded over
+the model axis on the way OUT of ``decode_step`` (see
+``MeshContext.logits_sharding``).  Sampling then never materialises the full
+vocab row anywhere: each shard reduces its own V/n slice and the shards
+agree on a winner with SCALAR collectives — O(B) bytes per step instead of
+the O(B·V) all-gather the replicated layout forces.
+
+  * ``shard_argmax`` — local argmax per shard, then a (value, index)
+    max-reduce: ``pmax`` the local best values, mask losers to a sentinel,
+    ``pmin`` the surviving GLOBAL indices.  Ties resolve to the smallest
+    global index — bit-exact with ``jnp.argmax`` over gathered logits
+    (which also returns the first maximal index).
+  * ``shard_topk`` — local top-k per shard, all-gather the k·n_shards
+    scalar candidates (vocab-independent bytes), top-k those.  Candidate
+    order is shard-major so cross-shard ties resolve to the smaller global
+    index, same as ``jax.lax.top_k`` on gathered logits; equal values
+    *within* one shard beyond its local k can permute the tail.
+
+Both are ``shard_map`` factories: build once per (mesh, batch layout), jit
+the result.  Outside a mesh they are plain ``jnp`` reductions, so the
+engine can call one code path everywhere.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def _local_argmax(lg, *, axis, vocab):
+    """Inside shard_map: lg is the (B_local, V/n) logit slice."""
+    li = jnp.argmax(lg, axis=-1)
+    lv = jnp.take_along_axis(lg, li[:, None], axis=-1)[:, 0]
+    gi = (li + jax.lax.axis_index(axis) * lg.shape[-1]).astype(jnp.int32)
+    vmax = jax.lax.pmax(lv, axis)
+    # losers point past the vocab; pmin keeps the first global maximiser
+    cand = jnp.where(lv == vmax, gi, jnp.int32(vocab))
+    return jax.lax.pmin(cand, axis)
+
+
+def _local_topk(lg, *, axis, k):
+    lv, li = jax.lax.top_k(lg, k)                       # (B, k) local
+    gi = (li + jax.lax.axis_index(axis) * lg.shape[-1]).astype(jnp.int32)
+    # k scalars per shard — bytes are O(B·k·n), never O(B·V)
+    allv = jax.lax.all_gather(lv, axis, axis=1)         # (B, n, k)
+    alli = jax.lax.all_gather(gi, axis, axis=1)
+    b = lg.shape[0]
+    v, pos = jax.lax.top_k(allv.reshape(b, -1), k)
+    return v, jnp.take_along_axis(alli.reshape(b, -1), pos, axis=1)
+
+
+def shard_argmax(ctx, batch: int):
+    """Greedy sampler over vocab-sharded logits → (B,) int32 token ids.
+
+    With ``ctx is None`` returns the plain replicated argmax (the same
+    callable signature), so the engine never branches at the call site.
+    """
+    if ctx is None:
+        return lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    ba = ctx.batch_axes(batch)
+
+    def sample(lg):
+        # the sentinel only has to exceed every real index; the true vocab
+        # extent is known here at trace time
+        return shard_map(
+            partial(_local_argmax, axis=ctx.model_axis, vocab=lg.shape[-1]),
+            mesh=ctx.mesh, in_specs=P(ba, ctx.model_axis),
+            out_specs=P(ba), check_rep=False)(lg)
+    return sample
+
+
+def shard_topk(ctx, batch: int, k: int):
+    """Top-k over vocab-sharded logits → ((B, k) values, (B, k) indices)."""
+    if ctx is None:
+        def dense(lg):
+            v, i = jax.lax.top_k(lg, k)
+            return v, i.astype(jnp.int32)
+        return dense
+    ba = ctx.batch_axes(batch)
+    return shard_map(
+        partial(_local_topk, axis=ctx.model_axis, k=k),
+        mesh=ctx.mesh,
+        in_specs=P(ba, ctx.model_axis),
+        out_specs=(P(ba), P(ba)),
+        check_rep=False)

@@ -34,7 +34,8 @@ from __future__ import annotations
 from typing import List
 
 import jax
-from jax.sharding import PartitionSpec as P
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.treepath import path_str as _path_str
 
@@ -116,6 +117,77 @@ def param_specs(tree) -> dict:
     """PartitionSpec pytree mirroring ``tree`` (works on abstract trees)."""
     return jax.tree_util.tree_map_with_path(
         lambda kp, leaf: spec_for_path(_path_str(kp), len(leaf.shape)), tree)
+
+
+def named_shardings(ctx, tree) -> dict:
+    """``param_specs`` as a ``NamedSharding`` pytree on ``ctx.mesh`` — the
+    tree you hand to ``jax.device_put`` to home a host param tree on the
+    mesh, and the in/out shardings of the serving hot path."""
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s),
+                        param_specs(tree),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_batch_dims(init_cache, batch: int, seq_len: int = 8):
+    """Per-leaf batch-dim index for a cache tree, derived STRUCTURALLY:
+    trace ``init_cache`` at two batch sizes and diff the shapes.  Immune to
+    extent collisions (batch == n_layers, etc.) that break any
+    match-by-extent heuristic; ``-1`` marks leaves with no batch dim.
+    Abstract tracing only — nothing is allocated."""
+    c1 = jax.eval_shape(lambda: init_cache(batch, seq_len))
+    c2 = jax.eval_shape(lambda: init_cache(batch + 1, seq_len))
+
+    def diff(a, b):
+        return next((i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                     if x != y), -1)
+    return jax.tree.map(diff, c1, c2)
+
+
+def cache_specs(ctx, cache, batch: int, batch_sharded: bool,
+                n_kv_heads: int = 0, batch_dims=None):
+    """PartitionSpec tree for KV caches / SSM states.
+
+    Shard the batch dim over the data axes where it divides, AND the
+    kv-head dim over the model axis where it divides — without the latter a
+    500k-context cache replicates over the model axis and cannot fit HBM
+    (batch=1 gives the data axes nothing to shard).
+
+    ``batch_dims`` (from ``cache_batch_dims``) pins the batch dim per leaf
+    exactly; callers with an ``init_cache`` at hand should always pass it.
+    Without it, the batch dim falls back to the FIRST dim whose extent
+    equals the global batch — cache layouts are stacked over layers/groups
+    with the batch dim at varying depth per family (attn: (L,B,C,H,D);
+    zamba ssm: (G,every,B,…)), so the fallback misfires when the batch
+    extent collides with a leading stack extent (e.g. batch == n_layers).
+    Shared by the dry-run cost model and the serving engine so the two can
+    never disagree on cache layout.
+    """
+    msize = ctx.model_size
+
+    def spec(l, bdim):
+        nd = jnp.ndim(l)
+        parts = [None] * nd
+        placed_batch = False
+        for dim in range(nd):
+            is_batch = (dim == bdim) if bdim is not None \
+                else (not placed_batch and l.shape[dim] == batch)
+            if batch_sharded and not placed_batch and is_batch:
+                parts[dim] = ctx.data_axes
+                placed_batch = True
+            elif (n_kv_heads and dim >= 2 and l.shape[dim] == n_kv_heads
+                  and n_kv_heads % msize == 0
+                  and ctx.model_axis not in parts):
+                parts[dim] = ctx.model_axis
+        # kv-heads not model-divisible (GQA kv in {1,4,8}): shard head_dim
+        # instead — attention contracts over D, GSPMD psums the partials
+        if ctx.model_axis not in parts and nd >= 3 \
+                and l.shape[-1] % msize == 0:
+            parts[-1] = ctx.model_axis
+        return P(*parts)
+
+    if batch_dims is None:
+        return jax.tree.map(lambda l: spec(l, None), cache)
+    return jax.tree.map(spec, cache, batch_dims)
 
 
 def validate_for_mesh(tree, mesh) -> List[str]:

@@ -49,40 +49,9 @@ def _batch_specs_tree(ctx, batch, batch_sharded: bool):
     return jax.tree.map(spec, batch)
 
 
-def _cache_specs_tree(ctx, cache, batch: int, batch_sharded: bool,
-                      n_kv_heads: int = 0):
-    """KV caches / SSM states: shard the batch dim over the data axes where
-    it divides, AND the kv-head dim over 'model' where it divides 16 —
-    without the latter a 500k-context cache replicates over the model axis
-    and cannot fit HBM (batch=1 gives the data axes nothing to shard).
-
-    Cache layouts are stacked over layers/groups with the batch dim at
-    varying depth per family (attn: (L,B,C,H,D); zamba ssm: (G,every,B,…));
-    the batch dim is the FIRST dim whose extent equals the global batch —
-    unambiguous for the assigned shapes (batch ∈ {256,128,32,1} never
-    collides with layer-stack extents)."""
-    msize = dict(zip(ctx.mesh.axis_names,
-                     ctx.mesh.devices.shape))[ctx.model_axis]
-
-    def spec(l):
-        nd = jnp.ndim(l)
-        parts = [None] * nd
-        placed_batch = False
-        for dim in range(nd):
-            if batch_sharded and not placed_batch and l.shape[dim] == batch:
-                parts[dim] = ctx.data_axes
-                placed_batch = True
-            elif (n_kv_heads and dim >= 2 and l.shape[dim] == n_kv_heads
-                  and n_kv_heads % msize == 0
-                  and ctx.model_axis not in parts):
-                parts[dim] = ctx.model_axis
-        # kv-heads not 16-divisible (GQA kv in {1,4,8}): shard head_dim
-        # instead — attention contracts over D, GSPMD psums the partials
-        if ctx.model_axis not in parts and nd >= 3 \
-                and l.shape[-1] % msize == 0:
-            parts[-1] = ctx.model_axis
-        return P(*parts)
-    return jax.tree.map(spec, cache)
+# cache-layout rules now live beside the param rules so the dry-run cost
+# model and the serving engine can never disagree on cache placement
+_cache_specs_tree = shard_rules.cache_specs
 
 
 def apply_variant(cfg, variant: str):
@@ -169,9 +138,11 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         else:  # decode
             acache = jax.eval_shape(
                 lambda: api.init_cache(shape.global_batch, shape.seq_len))
-            cspec = _cache_specs_tree(ctx, acache, shape.global_batch,
-                                      batch_sharded,
-                                      n_kv_heads=cfg.n_kv_heads)
+            cspec = _cache_specs_tree(
+                ctx, acache, shape.global_batch, batch_sharded,
+                n_kv_heads=cfg.n_kv_heads,
+                batch_dims=shard_rules.cache_batch_dims(
+                    api.init_cache, shape.global_batch, shape.seq_len))
             to_ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
                                            is_leaf=lambda x: isinstance(x, P))
             tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
@@ -181,11 +152,11 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             out_shardings = None
             if "logitshard" in variant:
                 # keep logits vocab-sharded on the way out: the sampler is
-                # shard-local (local argmax + scalar max-reduce), so the
-                # full-logits all-gather is pure waste (§Perf lever C2)
-                logits_spec = NamedSharding(
-                    mesh, P(ctx.data_axes if batch_sharded else None, "model"))
-                out_shardings = (logits_spec, to_ns(cspec))
+                # shard-local (local argmax + scalar max-reduce, see
+                # dist/sampling.py), so the full-logits all-gather is pure
+                # waste (§Perf lever C2)
+                out_shardings = (ctx.logits_sharding(shape.global_batch),
+                                 to_ns(cspec))
             fn = jax.jit(
                 api.decode_step,
                 in_shardings=(pshard, to_ns(cspec), tok_spec,

@@ -372,3 +372,19 @@ def collective_stats(hlo_text: str) -> dict:
 
 def count_ops(hlo_text: str, name: str) -> int:
     return len(re.findall(rf"\b{re.escape(name)}\(", hlo_text))
+
+
+def allgather_extent_count(hlo_text: str, extent: int) -> int:
+    """Number of all-gather ops whose OUTPUT carries a dim of ``extent``.
+
+    The serving guard: with ``extent = vocab`` this counts full-vocab logit
+    gathers — the collective the ``logitshard`` path must not contain
+    (tests/test_serve_sharded.py, serve-smoke CI)."""
+    n = 0
+    for comp in parse_module(hlo_text).values():
+        for op in comp.ops:
+            if op.kind.replace("-start", "") != "all-gather":
+                continue
+            if any(extent in dims for _, dims in _shape_dims(op.out_shape)):
+                n += 1
+    return n

@@ -6,8 +6,25 @@
 Tunes a small scale-set per task on distinct synthetic corpora (stand-ins
 for per-task adapters shipped to the fleet), then serves round-robin across
 tasks with O(MB) scale hot-swaps (paper Table 1's PEQA row).
+
+Mesh mode (``--mesh D,M``) is the dist subsystem's serving hot path: the
+backbone is homed on a (data, model) mesh per ``dist.sharding``, task swaps
+move per-shard local bytes only, and ``--logitshard`` (default on) keeps
+decode logits vocab-sharded with the shard-local sampler — no vocab
+all-gather in the loop.  On a CPU-only box, fake the devices first:
+
+    REPRO_FAKE_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
+        --mesh 2,4
 """
 from __future__ import annotations
+
+import os
+
+if os.environ.get("REPRO_FAKE_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") +
+        " --xla_force_host_platform_device_count=" +
+        os.environ["REPRO_FAKE_DEVICES"]).strip()
 
 import argparse
 import time
@@ -21,6 +38,8 @@ from repro.configs.base import OptimConfig, QuantConfig, TrainConfig, TuningConf
 from repro.core import policies
 from repro.core.scale_bank import ScaleBank
 from repro.data import pipeline, synthetic
+from repro.dist import context as dctx
+from repro.dist import sharding as shard_rules
 from repro.models import registry
 from repro.optim.adamw import make_optimizer
 from repro.train import loop, step
@@ -37,6 +56,11 @@ def main():
     ap.add_argument("--n-new", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--mesh", default="",
+                    help="'D,M' data×model mesh; serve sharded")
+    ap.add_argument("--no-logitshard", action="store_true",
+                    help="mesh mode: replicate logits + host argmax instead "
+                         "of the shard-local sampler")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
@@ -66,9 +90,32 @@ def main():
         print(f"[serve] tuned {task}: scale payload "
               f"{bank.nbytes(task):,} B")
 
-    engine = Engine(api, jax.tree.map(jnp.array, backbone), bank=bank)
+    ctx = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        mesh = jax.make_mesh(shape, ("data", "model"))
+        ctx = dctx.make_ctx(mesh)
+        problems = shard_rules.validate_for_mesh(backbone, mesh)
+        if problems:
+            raise SystemExit(f"[serve] sharding_problems: {problems[:5]}")
+        # snapshot to host first: device_put may alias device-resident
+        # buffers, and switch_task donates the engine's tree — the backbone
+        # must not share storage with it
+        backbone = jax.tree.map(np.asarray, backbone)
+        params = jax.device_put(backbone,
+                                shard_rules.named_shardings(ctx, backbone))
+        print(f"[serve] mesh {shape}: swap moves "
+              f"{bank.local_nbytes(args.tasks.split(',')[0], ctx):,} B/device "
+              f"of {bank.nbytes(args.tasks.split(',')[0]):,} B total")
+    else:
+        params = jax.tree.map(jnp.array, backbone)
+
+    engine = Engine(api, params, bank=bank, ctx=ctx,
+                    logitshard=ctx is not None and not args.no_logitshard)
     prompt = jnp.asarray(
         np.tile(np.arange(8, dtype=np.int32), (args.batch, 1)))
+    if ctx is not None:
+        prompt = jax.device_put(prompt, ctx.sharding())
     for task in args.tasks.split(",") * 2:
         dt = engine.switch_task(task)
         t0 = time.perf_counter()

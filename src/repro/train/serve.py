@@ -5,6 +5,19 @@ memory, per-task scale vectors hot-swapped from a ScaleBank in O(scale-size)
 (§3.3 "swift switching of task-specific parameters").  The engine serves
 greedy generation over a batch; `switch_task` is measured in
 benchmarks/kernel_bench.py against a full-model reload.
+
+Mesh mode: construct with a ``dist.context.MeshContext`` (params already
+homed on the mesh per ``dist.sharding.named_shardings``) and the engine
+becomes the serving hot path of the dist subsystem —
+
+  * ``switch_task`` swaps scales shard-locally (``ScaleBank.switch`` with
+    ctx + donation): per-shard bytes only, no resharding collective, no
+    transient second tree.
+  * ``logitshard=True`` keeps logits vocab-sharded out of ``decode_step``
+    (a sharding constraint on the returned logits, so the jit output stays
+    P(batch, model)) and samples with the shard-local argmax of
+    ``dist/sampling.py`` — the O(B·V) vocab all-gather disappears from the
+    decode loop, replaced by O(B) scalar reductions.
 """
 from __future__ import annotations
 
@@ -15,26 +28,91 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.scale_bank import ScaleBank
+from repro.dist import sampling
 from repro.models.registry import ModelAPI
 
 
 class Engine:
     def __init__(self, api: ModelAPI, params: dict,
-                 bank: Optional[ScaleBank] = None):
+                 bank: Optional[ScaleBank] = None,
+                 ctx=None, logitshard: bool = False):
         self.api = api
         self.params = params
         self.bank = bank
+        self.ctx = ctx
+        self.logitshard = bool(logitshard and ctx is not None)
+        if self.logitshard and api.cfg.vocab_size % ctx.model_size:
+            raise ValueError(
+                f"logitshard needs vocab {api.cfg.vocab_size} divisible by "
+                f"the model axis ({ctx.model_size})")
         self.current_task: Optional[str] = None
-        self._prefill = jax.jit(api.prefill)
-        self._decode = jax.jit(api.decode_step, donate_argnums=(1,))
+        self._prefill = jax.jit(self._shard_logits(api.prefill))
+        self._decode = jax.jit(self._shard_logits(api.decode_step),
+                               donate_argnums=(1,))
+        self._samplers = {}
+        self._cache_inits = {}
+
+    def _cache_shardings(self, cache, b):
+        """NamedSharding tree for the cache at batch ``b`` — the SAME
+        ``dist.sharding.cache_specs`` rules the dry-run cost model uses,
+        so engine and cost model can never disagree on cache placement."""
+        from repro.dist import sharding as shard_rules
+        ctx = self.ctx
+        specs = shard_rules.cache_specs(
+            ctx, cache, b, ctx.batch_axes(b) is not None,
+            n_kv_heads=getattr(self.api.cfg, "n_kv_heads", 0),
+            batch_dims=shard_rules.cache_batch_dims(self.api.init_cache, b))
+        return jax.tree.map(lambda l, s: ctx.sharding(*s), cache, specs)
+
+    def _shard_logits(self, fn):
+        """Pin the layout of the returned (logits, cache).
+
+        logitshard: logits vocab-sharded P(batch, model) — the jit output
+        keeps it, so no all-gather ever materialises.  Mesh without
+        logitshard: logits explicitly replicated — the host-style sampler
+        reads full rows, so the gather belongs inside the step where it is
+        visible to HLO analysis (and to the benchmark) instead of hiding
+        in the first eager op that touches the logits.  Either mesh mode
+        also pins the cache to ``dist.sharding.cache_specs``, so the
+        runtime decode loop compiles against the exact layout the dry-run
+        models (and the HLO guards scan).  Off-mesh: untouched.
+        """
+        if self.ctx is None:
+            return fn
+        ctx, ls = self.ctx, self.logitshard
+
+        def wrapped(*args):
+            logits, cache = fn(*args)
+            b = logits.shape[0]
+            spec = (ctx.logits_sharding(b) if ls
+                    else ctx.sharding(ctx.batch_axes(b), None))
+            logits = jax.lax.with_sharding_constraint(logits, spec)
+            cache = jax.tree.map(jax.lax.with_sharding_constraint,
+                                 cache, self._cache_shardings(cache, b))
+            return logits, cache
+        return wrapped
+
+    def _sampler(self, b: int):
+        """Greedy sampler for batch ``b`` (cached): shard-local argmax +
+        scalar max-reduce on a mesh, plain argmax off it."""
+        if b not in self._samplers:
+            self._samplers[b] = jax.jit(sampling.shard_argmax(
+                self.ctx if self.logitshard else None, b))
+        return self._samplers[b]
 
     # ------------------------------------------------------------- task swap
     def switch_task(self, name: str) -> float:
-        """Install task scales; returns wall seconds (paper: 'fast')."""
+        """Install task scales; returns wall seconds (paper: 'fast').
+
+        Blocks on EVERY swapped leaf (the whole tree), so the reported
+        wall time covers the full transfer, not just the first leaf.  In
+        mesh mode the old tree is donated — the engine must own its params.
+        """
         assert self.bank is not None, "no ScaleBank attached"
         t0 = time.perf_counter()
-        self.params = self.bank.switch(self.params, name)
-        jax.block_until_ready(jax.tree.leaves(self.params)[0])
+        self.params = self.bank.switch(self.params, name, ctx=self.ctx,
+                                       donate=self.ctx is not None)
+        jax.block_until_ready(self.params)
         self.current_task = name
         return time.perf_counter() - t0
 
@@ -45,23 +123,41 @@ class Engine:
         b, s = tokens.shape
         total = s + n_new
         cache_len = cache_len or total
+        sample = self._sampler(b)
         # prefill builds a cache sized to the prompt; re-home it into a
         # cache with decode headroom
         logits, cache = self._prefill(self.params, {"tokens": tokens})
         cache = self._grow_cache(cache, b, cache_len, s)
         out = [tokens]
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        tok = sample(logits)[:, None]
         for i in range(n_new):
             out.append(tok)
             if i == n_new - 1:
                 break
             logits, cache = self._decode(self.params, cache, tok,
                                          jnp.int32(s + i))
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            tok = sample(logits)[:, None]
         return jnp.concatenate(out, axis=1)
 
+    def _init_cache(self, b, cache_len):
+        """Decode cache with headroom.  On a mesh it is CREATED sharded per
+        ``cache_specs`` (jit with out_shardings, memoized per shape) — an
+        eager ``init_cache`` would materialise the whole cache replicated
+        on one device, exactly the blow-up the layout exists to avoid, and
+        would make step 1 pay a reshard the guarded decode HLO never shows.
+        """
+        if self.ctx is None:
+            return self.api.init_cache(b, cache_len)
+        key = (b, cache_len)
+        if key not in self._cache_inits:
+            abs_full = jax.eval_shape(lambda: self.api.init_cache(b, cache_len))
+            self._cache_inits[key] = jax.jit(
+                lambda: self.api.init_cache(b, cache_len),
+                out_shardings=self._cache_shardings(abs_full, b))
+        return self._cache_inits[key]()
+
     def _grow_cache(self, cache, b, cache_len, s):
-        full = self.api.init_cache(b, cache_len)
+        full = self._init_cache(b, cache_len)
 
         def place(dst, src):
             if dst.shape == src.shape:
@@ -75,3 +171,25 @@ class Engine:
                 dst, src.astype(dst.dtype), 0, axis=axis)
 
         return jax.tree.map(place, full, cache)
+
+    # ------------------------------------------------------------ introspect
+    def decode_hlo(self, b: int, cache_len: int) -> str:
+        """Compiled HLO of one decode step at batch ``b`` — what the tests
+        and the serve-smoke CI job scan for vocab-dimension all-gathers."""
+        def absr(l):
+            if isinstance(l, jax.Array):
+                return jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                            sharding=l.sharding)
+            return l
+        aparams = jax.tree.map(absr, self.params)
+        acache = jax.eval_shape(lambda: self.api.init_cache(b, cache_len))
+        if self.ctx is not None:
+            # lower against the cache layout the runtime loop settles into,
+            # so the guarded HLO is the executed HLO
+            acache = jax.tree.map(
+                lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                                  sharding=s),
+                acache, self._cache_shardings(acache, b))
+        tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        return self._decode.lower(aparams, acache, tok, pos).compile().as_text()

@@ -1,0 +1,147 @@
+"""Mesh-native serving: sharded ScaleBank swaps + shard-local sampling.
+
+Subprocess tests (jax pins the device count at first init; the main test
+process must keep seeing 1 CPU device).  One child process covers the whole
+serving acceptance surface on a (2, 4) mesh:
+
+  * post-swap scale leaves land exactly on their ``param_specs`` shardings,
+  * the swap HLO contains NO collective (the layout is swap-aligned, so a
+    task switch moves per-shard local bytes only),
+  * the ``logitshard`` shard-local argmax matches the gathered argmax
+    BIT-EXACTLY (including cross-shard and within-shard value ties),
+  * the logitshard decode step contains no vocab-dimension all-gather
+    while the replicated baseline contains exactly the one it deletes,
+  * end-to-end: mesh-engine greedy generation equals the host engine's.
+"""
+import subprocess
+import sys
+import textwrap
+
+from conftest import subproc_env
+
+_SERVE_TEST = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import configs
+    from repro.configs.base import QuantConfig, TuningConfig
+    from repro.core import policies
+    from repro.core import scale_bank as sb
+    from repro.core.treepath import path_str
+    from repro.dist import context as dctx, sampling
+    from repro.dist import sharding as shard_rules
+    from repro.launch import hlo_stats
+    from repro.models import registry
+    from repro.train.serve import Engine
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    ctx = dctx.make_ctx(mesh)
+    cfg = configs.paper_lm(n_layers=2, d_model=128, n_heads=4, d_ff=256,
+                           vocab=512).replace(
+        tuning=TuningConfig(mode="peqa"), quant=QuantConfig(bits=4, n_grid=2))
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p, _ = policies.prepare(api.init(rng), cfg, rng)
+    p = jax.tree.map(np.asarray, p)     # host master copy (swaps donate)
+
+    bank = sb.ScaleBank()
+    bank.add("A", p)
+    rngs = np.random.default_rng(7)
+    bank.tasks["B"] = {k: (v * rngs.uniform(0.5, 1.5, v.shape)
+                           ).astype(v.dtype)
+                       for k, v in bank.tasks["A"].items()}
+
+    # ---- sharded swap: shardings == param_specs, no collectives --------
+    assert shard_rules.validate_for_mesh(p, mesh) == []
+    sp = jax.device_put(p, shard_rules.named_shardings(ctx, p))
+    swapped = bank.switch(sp, "B", ctx=ctx)
+
+    def chk(kp, leaf):
+        path = path_str(kp)
+        if path.split("/")[-1] == "scale":
+            want = jax.sharding.NamedSharding(
+                mesh, shard_rules.spec_for_path(path, leaf.ndim))
+            assert leaf.sharding.is_equivalent_to(want, leaf.ndim), \\
+                (path, leaf.sharding, want)
+    jax.tree_util.tree_map_with_path(chk, swapped)
+
+    hlo = sb.swap_hlo(sp, bank.tasks["B"], ctx)
+    coll = hlo_stats.collective_stats(hlo)
+    assert coll["total_bytes"] == 0.0, coll
+    for kind in ("all-gather", "all-reduce", "collective-permute"):
+        assert kind + "(" not in hlo, kind
+
+    # swapped values match the host path bit-exactly
+    ref = bank.switch(jax.tree.map(jnp.asarray, p), "B")
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(swapped)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # per-device payload is the sharded fraction of the scale set
+    assert bank.local_nbytes("B", ctx) < bank.nbytes("B")
+
+    # ---- cache batch-dim inference survives extent collisions ----------
+    # batch == n_layers == 2: the attn cache is (L=2, B=2, C, H, D) — the
+    # structural inference must shard dim 1 (batch), never dim 0 (layers)
+    bdims = shard_rules.cache_batch_dims(api.init_cache, 2, 16)
+    acache = jax.eval_shape(lambda: api.init_cache(2, 16))
+    cspecs = shard_rules.cache_specs(ctx, acache, 2, True,
+                                     n_kv_heads=cfg.n_kv_heads,
+                                     batch_dims=bdims)
+    for leaf, bd, cs in zip(jax.tree.leaves(acache), jax.tree.leaves(bdims),
+                            jax.tree.leaves(cspecs)):
+        assert bd != 0, (leaf.shape, bd)       # dim 0 is the layer stack
+        if bd >= 0:
+            assert tuple(cs)[bd] == ctx.data_axes, (leaf.shape, bd, cs)
+            assert all(ax != ctx.data_axes for i, ax in enumerate(tuple(cs))
+                       if i != bd), (leaf.shape, cs)
+
+    # ---- shard-local argmax: bit-exact vs gathered argmax --------------
+    B, V = 4, cfg.vocab_size
+    lg = rngs.normal(size=(B, V)).astype(np.float32)
+    lg[0, 7] = lg[0, 300] = 99.0      # tie ACROSS shards -> first wins
+    lg[2, 130] = lg[2, 131] = 55.0    # tie WITHIN a shard
+    glg = jax.device_put(jnp.asarray(lg), ctx.logits_sharding(B))
+    got = np.asarray(jax.jit(sampling.shard_argmax(ctx, B))(glg))
+    np.testing.assert_array_equal(got, np.argmax(lg, axis=-1))
+    v, i = jax.jit(sampling.shard_topk(ctx, B, 5))(glg)
+    vr, ir = jax.lax.top_k(jnp.asarray(lg), 5)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(vr))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+
+    # ---- decode HLO: logitshard deletes the vocab all-gather -----------
+    mk = lambda ls: Engine(
+        api, jax.device_put(p, shard_rules.named_shardings(ctx, p)),
+        bank=bank, ctx=ctx, logitshard=ls)
+    eng_base, eng_ls = mk(False), mk(True)
+    ag_base = hlo_stats.allgather_extent_count(eng_base.decode_hlo(B, 32), V)
+    ag_ls = hlo_stats.allgather_extent_count(eng_ls.decode_hlo(B, 32), V)
+    assert ag_ls == 0, f"logitshard decode still all-gathers vocab: {ag_ls}"
+    assert ag_base >= 1, "replicated baseline should gather the logits"
+
+    # ---- end-to-end: mesh generation == host generation ----------------
+    prompt = jnp.tile(jnp.arange(8, dtype=jnp.int32)[None], (B, 1))
+    host = Engine(api, jax.tree.map(jnp.asarray, p), bank=bank)
+    o_host = np.asarray(host.generate(prompt, n_new=6))
+    o_mesh = np.asarray(eng_ls.generate(
+        jax.device_put(prompt, ctx.sharding()), n_new=6))
+    np.testing.assert_array_equal(o_host, o_mesh)
+
+    # swap on the mesh engine steers generation, and blocks on all leaves
+    dt = eng_ls.switch_task("B")
+    assert dt > 0
+    host.switch_task("B")
+    o_host_b = np.asarray(host.generate(prompt, n_new=6))
+    o_mesh_b = np.asarray(eng_ls.generate(
+        jax.device_put(prompt, ctx.sharding()), n_new=6))
+    np.testing.assert_array_equal(o_host_b, o_mesh_b)
+    assert not np.array_equal(o_mesh, o_mesh_b), \\
+        "task B scales must change the continuation"
+    print("SUBPROC_OK")
+""")
+
+
+def test_sharded_serving_subprocess():
+    """Sharded swaps + shard-local sampling on a (2,4) host-device mesh."""
+    res = subprocess.run([sys.executable, "-c", _SERVE_TEST],
+                         capture_output=True, text=True, timeout=900,
+                         env=subproc_env())
+    assert "SUBPROC_OK" in res.stdout, res.stderr[-3000:]
