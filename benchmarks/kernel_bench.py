@@ -11,6 +11,12 @@
     (``python -m benchmarks.kernel_bench --check-sharded`` exits non-zero
     on any sharding problem, swap resharding collective, or vocab
     all-gather in the logitshard decode step).
+  * Continuous batching: a mixed-length workload (n_new ∈ {8, 32, 128})
+    through the paged slot-pool engine vs the lockstep baseline —
+    tokens/s, decode-step and bubble-slot-step counts, plus the continuous
+    guards ``--check-sharded`` enforces: zero bubbles, ≥1.5× fewer decode
+    steps, post-admit cache shardings == ``cache_specs``, and zero
+    vocab-extent all-gathers in the continuous decode HLO.
 """
 from __future__ import annotations
 
@@ -224,11 +230,130 @@ def sharded_serving(report, check: bool = False) -> bool:
     return ok
 
 
+def continuous_serving(report, check: bool = False) -> bool:
+    """Continuous batching vs lockstep on a mixed-length workload.
+
+    The lockstep baseline serves n_slots-sized batches in arrival order,
+    decoding every batch to its LONGEST member — short sequences pay
+    bubble slot-steps.  The continuous engine admits/evicts mid-loop at
+    one compiled shape, so every decode step serves only live sequences.
+    Same guard policy as ``sharded_serving``: on one device this is a
+    skip, except in check mode.  Wall-clock tokens/s is reported; the CI
+    gate checks the DETERMINISTIC invariants (step counts, bubbles,
+    shardings, HLO) so a noisy runner cannot flake the build.
+    """
+    from repro.dist import context as dctx
+    from repro.dist import sharding as shard_rules
+    from repro.launch import hlo_stats
+    from repro.train.serve import Engine, Request
+
+    n = jax.device_count()
+    if n < 2:
+        report("kernel/continuous", 0.0,
+               "skipped: 1 device (set XLA_FLAGS="
+               "--xla_force_host_platform_device_count=8)")
+        return not check
+    model = 4 if n % 4 == 0 else 2
+    mesh = jax.make_mesh((n // model, model), ("data", "model"))
+    ctx = dctx.make_ctx(mesh)
+
+    cfg = _serving_cfg()
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p, _ = policies.prepare(api.init(rng), cfg, rng)
+    p = jax.tree.map(np.asarray, p)
+    vocab = cfg.vocab_size
+
+    n_slots, lengths = 4, (8, 32, 128)
+    reqs = [Request(tokens=(np.arange(8, dtype=np.int32) * (i + 1)) % vocab,
+                    n_new=lengths[i % len(lengths)])
+            for i in range(3 * n_slots)]
+    tokens_total = sum(r.n_new for r in reqs)
+    groups = [reqs[i:i + n_slots] for i in range(0, len(reqs), n_slots)]
+    lock_steps = sum(max(r.n_new for r in g) - 1 for g in groups)
+    lock_bubbles = sum(max(r.n_new for r in g) - r.n_new
+                       for g in groups for r in g)
+
+    mk = lambda: Engine(
+        api, jax.device_put(p, shard_rules.named_shardings(ctx, p)),
+        ctx=ctx, logitshard=True)
+    eng = mk()
+    ok = True
+
+    # ---- lockstep baseline: batch by arrival order, decode to the max
+    lock_out = []
+    for g in groups:                                    # compile warmup
+        eng.generate(jnp.asarray(np.stack([r.tokens for r in g])),
+                     n_new=max(r.n_new for r in g))
+    t0 = time.perf_counter()
+    for g in groups:
+        out = eng.generate(jnp.asarray(np.stack([r.tokens for r in g])),
+                           n_new=max(r.n_new for r in g))
+        lock_out.append(np.asarray(out))
+    t_lock = time.perf_counter() - t0
+
+    # ---- continuous: paged slots, mid-loop admit/evict ------------------
+    eng2 = mk()
+    eng2.serve(reqs, n_slots=n_slots)                   # compile warmup
+    rep = eng2.serve(reqs, n_slots=n_slots)
+    if rep.bubble_slot_steps != 0:
+        report("kernel/continuous", 0.0,
+               f"FAIL {rep.bubble_slot_steps} bubble slot-steps")
+        ok = False
+    step_ratio = lock_steps / max(rep.steps, 1)
+    if check and step_ratio < 1.5:
+        report("kernel/continuous", 0.0,
+               f"FAIL step ratio {step_ratio:.2f}x < 1.5x "
+               f"(lockstep {lock_steps} vs continuous {rep.steps})")
+        ok = False
+
+    # correctness: continuous output == the lockstep rows, per request
+    for i, r in enumerate(reqs):
+        row = lock_out[i // n_slots][i % n_slots]
+        want = row[len(r.tokens):len(r.tokens) + r.n_new]
+        if rep.tokens[i] is None or not np.array_equal(
+                np.asarray(rep.tokens[i]), want):
+            report("kernel/continuous", 0.0,
+                   f"FAIL req{i} tokens diverge from lockstep")
+            ok = False
+            break
+
+    # post-admit slot-pool shardings == cache_specs
+    pool = eng2.open_pool(n_slots, 64)
+    eng2.admit(pool, Request(tokens=np.arange(8, dtype=np.int32), n_new=4))
+    want_sh = eng2._cache_shardings(pool.cache, n_slots)
+    for leaf, w in zip(jax.tree.leaves(pool.cache),
+                       jax.tree.leaves(want_sh)):
+        if not leaf.sharding.is_equivalent_to(w, leaf.ndim):
+            report("kernel/continuous", 0.0,
+                   f"FAIL post-admit sharding {leaf.sharding} != {w}")
+            ok = False
+            break
+
+    # continuous decode HLO: still zero vocab-extent all-gathers
+    ag = hlo_stats.allgather_extent_count(
+        eng2.continuous_decode_hlo(n_slots, 64), vocab)
+    if ag:
+        report("kernel/continuous_hlo", 0.0,
+               f"FAIL {ag} vocab all-gathers in continuous decode")
+        ok = False
+
+    report("kernel/continuous", rep.wall_s * 1e6,
+           f"tok/s continuous={tokens_total / rep.wall_s:.0f} "
+           f"lockstep={tokens_total / t_lock:.0f} "
+           f"({tokens_total / rep.wall_s / (tokens_total / t_lock):.2f}x) "
+           f"steps={rep.steps} vs {lock_steps} ({step_ratio:.2f}x) "
+           f"bubbles={rep.bubble_slot_steps} vs {lock_bubbles} "
+           f"idle={rep.idle_slot_steps} vocab_allgathers={ag}")
+    return ok
+
+
 def run(report):
     traffic_model(report)
     xla_path_walltime(report)
     task_switch(report)
     sharded_serving(report)
+    continuous_serving(report)
 
 
 if __name__ == "__main__":
@@ -237,9 +362,10 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--check-sharded", action="store_true",
-                    help="run only the sharded serving bench; exit 1 on "
-                         "sharding problems / swap collectives / vocab "
-                         "all-gathers (the serve-smoke CI gate)")
+                    help="run only the sharded + continuous serving "
+                         "benches; exit 1 on sharding problems / swap "
+                         "collectives / vocab all-gathers / bubble steps "
+                         "(the serve-smoke CI gate)")
     args = ap.parse_args()
 
     def _report(n, us, d):
@@ -247,6 +373,7 @@ if __name__ == "__main__":
 
     if args.check_sharded:
         passed = sharded_serving(_report, check=True)
+        passed = continuous_serving(_report, check=True) and passed
         print(f"[check-sharded] {'OK' if passed else 'FAILED'}")
         sys.exit(0 if passed else 1)
     run(_report)

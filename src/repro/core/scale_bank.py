@@ -134,9 +134,22 @@ class ScaleBank:
         self.tasks: Dict[str, Dict[str, np.ndarray]] = {}
         if root:
             os.makedirs(root, exist_ok=True)
-            for f in os.listdir(root):
+            for f in sorted(os.listdir(root)):
                 if f.endswith(".npz"):
-                    self.tasks[f[:-4]] = dict(np.load(os.path.join(root, f)))
+                    self.tasks[f[:-4]] = self._load_npz(os.path.join(root, f))
+
+    @staticmethod
+    def _load_npz(path: str) -> Dict[str, np.ndarray]:
+        """Load one task file, CLOSING the archive: a bare
+        ``dict(np.load(path))`` keeps the NpzFile handle open for the life
+        of the process — one leaked fd per task on disk."""
+        try:
+            with np.load(path) as z:
+                return {k: z[k] for k in z.files}
+        except Exception as e:
+            raise ValueError(
+                f"ScaleBank: corrupt or unreadable task file {path!r}: "
+                f"{e}") from e
 
     def add(self, name: str, params: dict, include_zero: bool = False):
         scales = extract_scales(params, include_zero)
@@ -154,17 +167,31 @@ class ScaleBank:
         return sum(a.nbytes for a in self.tasks[name].values())
 
     def local_nbytes(self, name: str, ctx: Optional[object] = None) -> int:
-        """Bytes one device receives in a swap: sharded scales contribute
-        ``nbytes / model_size``, replicated (row-parallel) scales their full
-        size.  With no ctx this equals ``nbytes`` (single copy)."""
+        """Bytes one device receives in a swap, computed from the actual
+        ADDRESSABLE SHARD SHAPE: each sharded dim contributes
+        ``ceil(extent / axis_size)`` rows per device — GSPMD pads the last
+        shard when an extent does not divide its axes, and every device
+        still receives the padded slice, so a plain ``nbytes // model_size``
+        under-reports the transfer.  Replicated (row-parallel) scales
+        contribute their full size.  With no ctx this equals ``nbytes``
+        (single copy)."""
         if ctx is None:
             return self.nbytes(name)
         from repro.dist import sharding as shard_rules
+        sizes = ctx.axis_sizes
         total = 0
         for path, arr in self.tasks[name].items():
-            spec = shard_rules.spec_for_path(path, np.ndim(arr))
-            sharded = any(ax is not None for ax in tuple(spec))
-            total += arr.nbytes // (ctx.model_size if sharded else 1)
+            spec = tuple(shard_rules.spec_for_path(path, np.ndim(arr)))
+            n = 1
+            for dim, extent in enumerate(np.shape(arr)):
+                ax = spec[dim] if dim < len(spec) else None
+                axes = () if ax is None else (
+                    ax if isinstance(ax, tuple) else (ax,))
+                k = 1
+                for a in axes:
+                    k *= sizes[a]
+                n *= -(-extent // k)        # ceil: the padded shard extent
+            total += n * np.asarray(arr).dtype.itemsize
         return total
 
     def names(self) -> Iterable[str]:

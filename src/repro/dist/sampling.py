@@ -74,6 +74,26 @@ def shard_argmax(ctx, batch: int):
     return sample
 
 
+def shard_argmax_masked(ctx, batch: int, fill: int = 0):
+    """Active-mask-aware greedy sampler for the continuously-batched decode
+    loop → ``fn(logits (B, V), active (B,) bool) -> (B,) int32``.
+
+    Free / evicted slots still flow through the decode step (the batch
+    extent is the FIXED slot-pool size — that is what keeps the loop at one
+    compiled shape), but their logits are garbage; the mask pins their
+    sample to ``fill`` so the emitted token stream is deterministic and the
+    next step's embedding lookup stays in-vocab.  Active slots sample
+    exactly as ``shard_argmax`` (shard-local on a mesh: the ``where`` runs
+    on the (B,) winner vector AFTER the scalar max-reduce, so no vocab
+    gather appears and the collective payload is unchanged).
+    """
+    base = shard_argmax(ctx, batch)
+
+    def sample(lg, active):
+        return jnp.where(active, base(lg), jnp.int32(fill))
+    return sample
+
+
 def shard_topk(ctx, batch: int, k: int):
     """Top-k over vocab-sharded logits → ((B, k) values, (B, k) indices)."""
     if ctx is None:

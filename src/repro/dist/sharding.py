@@ -128,19 +128,46 @@ def named_shardings(ctx, tree) -> dict:
                         is_leaf=lambda x: isinstance(x, P))
 
 
-def cache_batch_dims(init_cache, batch: int, seq_len: int = 8):
-    """Per-leaf batch-dim index for a cache tree, derived STRUCTURALLY:
-    trace ``init_cache`` at two batch sizes and diff the shapes.  Immune to
-    extent collisions (batch == n_layers, etc.) that break any
-    match-by-extent heuristic; ``-1`` marks leaves with no batch dim.
-    Abstract tracing only — nothing is allocated."""
-    c1 = jax.eval_shape(lambda: init_cache(batch, seq_len))
-    c2 = jax.eval_shape(lambda: init_cache(batch + 1, seq_len))
+def _probe_dims(init_cache, args1, args2):
+    """Trace ``init_cache`` at two argument tuples and return the per-leaf
+    index of the first differing dim (``-1`` if none).  Abstract tracing
+    only — nothing is allocated.  The shared core of the structural dim
+    oracles below."""
+    c1 = jax.eval_shape(lambda: init_cache(*args1))
+    c2 = jax.eval_shape(lambda: init_cache(*args2))
 
     def diff(a, b):
         return next((i for i, (x, y) in enumerate(zip(a.shape, b.shape))
                      if x != y), -1)
     return jax.tree.map(diff, c1, c2)
+
+
+def cache_batch_dims(init_cache, batch: int, seq_len: int = 8):
+    """Per-leaf batch-dim index for a cache tree, derived STRUCTURALLY:
+    trace ``init_cache`` at two batch sizes and diff the shapes.  Immune to
+    extent collisions (batch == n_layers, etc.) that break any
+    match-by-extent heuristic; ``-1`` marks leaves with no batch dim."""
+    return _probe_dims(init_cache, (batch, seq_len), (batch + 1, seq_len))
+
+
+def cache_seq_dims(init_cache, batch: int, seq_len: int = 8):
+    """Per-leaf sequence(-capacity) dim index for a cache tree, derived
+    STRUCTURALLY: trace ``init_cache`` at two sequence lengths and diff the
+    shapes (the same trick as ``cache_batch_dims``) — immune to extent
+    collisions and to layout families that stack the seq dim at different
+    depths.  ``-1`` marks leaves with no seq dim (SSM / recurrent states).
+
+    This is what the engine's cache-growing and slot-admission writes key
+    on: the paged slot pool is ``init_cache(n_slots, cache_len)``, so its
+    slot dim IS the batch dim (``cache_batch_dims``) and shards over the
+    data axes exactly like the lockstep batch did, while prompt KV rows
+    land along the dim this function names.
+
+    Sliding-window caches clamp capacity to the window — the two probe
+    lengths must straddle the clamp (``seq_len < window``) or the seq dim
+    is invisible; callers that know the window pass
+    ``seq_len=min(8, window - 1)`` (Engine._cache_dims does)."""
+    return _probe_dims(init_cache, (batch, seq_len), (batch, seq_len + 1))
 
 
 def cache_specs(ctx, cache, batch: int, batch_sharded: bool,

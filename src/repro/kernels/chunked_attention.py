@@ -33,15 +33,28 @@ def _pick_block(sk: int, block: int) -> int:
 
 
 def _mask_block(iq, jk0, bk, sq, causal, window, offset):
-    """(sq, bk) visibility mask for key block starting at jk0."""
+    """Visibility mask for key block starting at jk0: (sq, bk), or
+    (B, sq, bk) when ``offset`` is a (B,) per-row offset vector (the
+    continuous-batching decode step)."""
     jk = jk0 + jnp.arange(bk)
-    i_abs = iq + offset
-    m = jnp.ones((sq, bk), bool)
+    offset = jnp.asarray(offset)
+    if offset.ndim:
+        i_abs = iq[None, :] + offset[:, None]          # (B, sq)
+        m = jnp.ones((offset.shape[0], sq, bk), bool)
+    else:
+        i_abs = iq + offset
+        m = jnp.ones((sq, bk), bool)
     if causal:
-        m &= jk[None, :] <= i_abs[:, None]
+        m &= jk <= i_abs[..., None]
     if window is not None:
-        m &= jk[None, :] > i_abs[:, None] - window
+        m &= jk > i_abs[..., None] - window
     return m
+
+
+def _apply_mask(logits, mask):
+    """mask (sq,bk) broadcasts over (b,hkv,rep); (B,sq,bk) is per-row."""
+    mask = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
+    return jnp.where(mask, logits, NEG_INF)
 
 
 def _fwd(q, k, v, causal, window, scale, offset, block):
@@ -62,7 +75,7 @@ def _fwd(q, k, v, causal, window, scale, offset, block):
         vb = jax.lax.dynamic_slice_in_dim(vf, jk0, block, axis=1)
         logits = jnp.einsum("bqhrd,bkhd->bhrqk", qf, kb)
         mask = _mask_block(iq, jk0, block, sq, causal, window, offset)
-        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        logits = _apply_mask(logits, mask)
         m_new = jnp.maximum(m_run, logits.max(-1))
         p = jnp.exp(logits - m_new[..., None])
         corr = jnp.exp(m_run - m_new)
@@ -125,7 +138,7 @@ def _ca_bwd(causal, window, scale, offset, block, res, dout):
         vb = jax.lax.dynamic_slice_in_dim(vf, jk0, block, axis=1)
         logits = jnp.einsum("bqhrd,bkhd->bhrqk", qf, kb)
         mask = _mask_block(iq, jk0, block, sq, causal, window, offset_)
-        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        logits = _apply_mask(logits, mask)
         p = jnp.exp(logits - lse[..., None])              # exact probs
         dp = jnp.einsum("bhrqd,bkhd->bhrqk", dof, vb)
         ds = p * (dp - delta[..., None])                  # (b,hkv,rep,sq,bk)

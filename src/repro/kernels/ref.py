@@ -48,6 +48,8 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int | None = No
     offset: absolute position of query 0; key slot j is at absolute position
     j.  Defaults to Sk - Sq (training / prefill: ends aligned).  Decode with
     a KV cache passes offset = pos so unwritten slots (> pos) are masked.
+    A (B,)-shaped offset gives every batch row its OWN query position — the
+    continuously-batched decode step, where slots sit at different depths.
     """
     b, sq, hq, d = q.shape
     _, sk, hkv, _ = k.shape
@@ -60,14 +62,21 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int | None = No
     logits = jnp.einsum("bqhrd,bkhd->bhrqk", qf.reshape(b, sq, hkv, rep, d), kf)
     if offset is None:
         offset = sk - sq
-    iq = jnp.arange(sq)[:, None] + offset
-    jk = jnp.arange(sk)[None, :]
-    mask = jnp.ones((sq, sk), dtype=bool)
+    offset = jnp.asarray(offset)
+    if offset.ndim:                                   # (B,) per-row offsets
+        iq = jnp.arange(sq)[None, :, None] + offset[:, None, None]
+        jk = jnp.arange(sk)[None, None, :]
+        mask = jnp.ones((b, sq, sk), dtype=bool)
+    else:
+        iq = jnp.arange(sq)[:, None] + offset
+        jk = jnp.arange(sk)[None, :]
+        mask = jnp.ones((sq, sk), dtype=bool)
     if causal:
         mask &= jk <= iq
     if window is not None:
         mask &= jk > iq - window
-    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    mask = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
     p = jax.nn.softmax(logits, axis=-1)
     p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
     out = jnp.einsum("bhrqk,bkhd->bqhrd", p, vf)

@@ -15,6 +15,17 @@ all-gather in the loop.  On a CPU-only box, fake the devices first:
 
     REPRO_FAKE_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
         --mesh 2,4
+
+``--continuous`` switches the traffic loop to the continuously-batched
+engine: an arrival-simulating driver builds a mixed-length, mixed-task
+request stream (staggered arrivals on the decode-step clock) and pushes it
+through ``Engine.serve`` — paged KV slots, mid-loop admit/evict, per-slot
+positions.  It exits non-zero if any request is dropped or any bubble step
+is observed (a finished sequence occupying a decode step), so CI can run
+it as a smoke gate:
+
+    REPRO_FAKE_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
+        --mesh 2,4 --continuous
 """
 from __future__ import annotations
 
@@ -43,7 +54,60 @@ from repro.dist import sharding as shard_rules
 from repro.models import registry
 from repro.optim.adamw import make_optimizer
 from repro.train import loop, step
-from repro.train.serve import Engine
+from repro.train.serve import Engine, Request
+
+
+def place_prompt(prompt, ctx):
+    """Home the prompt BATCH-SHARDED when the batch divides the data axes.
+
+    A fully replicated put (``ctx.sharding()``) makes prefill pay a batch
+    reshard on entry — a collective the decode-loop benchmarks never see
+    because it happens before the guarded HLO.  Batch-sharded placement is
+    prefill's natural input layout (``constrain_tokens``), so the put IS
+    the final layout.
+    """
+    if ctx is None:
+        return prompt
+    return jax.device_put(
+        prompt, ctx.sharding(ctx.batch_axes(prompt.shape[0]), None))
+
+
+def mixed_workload(tasks, batch, n_new, n_requests, vocab, stagger=2):
+    """Arrival-simulating request stream: mixed lengths (n_new/2, n_new,
+    2*n_new cycling), mixed tasks (round-robin per arrival wave), prompts
+    of 8 tokens, arrivals staggered ``stagger`` decode steps apart."""
+    lengths = [max(2, n_new // 2), n_new, 2 * n_new]
+    reqs = []
+    for i in range(n_requests):
+        prompt = (np.arange(8, dtype=np.int32) * (i + 1)) % vocab
+        reqs.append(Request(
+            tokens=prompt, n_new=lengths[i % len(lengths)],
+            task=tasks[(i // batch) % len(tasks)],
+            arrival=(i // batch) * stagger))
+    return reqs
+
+
+def run_continuous(engine, cfg, args, tasks):
+    reqs = mixed_workload(tasks, args.batch, args.n_new,
+                          n_requests=3 * args.batch, vocab=cfg.vocab_size)
+    t0 = time.perf_counter()
+    rep = engine.serve(reqs, n_slots=args.batch)
+    wall = time.perf_counter() - t0
+    dropped = [i for i, t in enumerate(rep.tokens) if t is None]
+    for i, (r, out) in enumerate(zip(reqs, rep.tokens)):
+        got = len(out) if out is not None else 0
+        print(f"[serve] req{i:02d} task={r.task} n_new={r.n_new} "
+              f"arrival={r.arrival} got={got} "
+              f"sample={out[:4] if out else []}")
+    print(f"[serve] continuous: {rep.decoded} tokens in {rep.steps} steps "
+          f"({args.batch} slots) tok/s={rep.decoded / wall:.0f} "
+          f"bubble_slot_steps={rep.bubble_slot_steps} "
+          f"idle_slot_steps={rep.idle_slot_steps} switches={rep.switches}")
+    ok = not dropped and rep.bubble_slot_steps == 0 and all(
+        out is not None and len(out) == r.n_new
+        for r, out in zip(reqs, rep.tokens))
+    print(f"[serve] continuous {'OK' if ok else 'FAILED'}")
+    return ok
 
 
 def main():
@@ -61,6 +125,12 @@ def main():
     ap.add_argument("--no-logitshard", action="store_true",
                     help="mesh mode: replicate logits + host argmax instead "
                          "of the shard-local sampler")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve an arrival-simulating mixed-length, "
+                         "mixed-task stream through the continuously-"
+                         "batched engine (paged KV slots, mid-loop "
+                         "admit/evict); exits 1 on dropped requests or "
+                         "bubble steps")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
@@ -112,10 +182,11 @@ def main():
 
     engine = Engine(api, params, bank=bank, ctx=ctx,
                     logitshard=ctx is not None and not args.no_logitshard)
-    prompt = jnp.asarray(
-        np.tile(np.arange(8, dtype=np.int32), (args.batch, 1)))
-    if ctx is not None:
-        prompt = jax.device_put(prompt, ctx.sharding())
+    if args.continuous:
+        ok = run_continuous(engine, cfg, args, args.tasks.split(","))
+        raise SystemExit(0 if ok else 1)
+    prompt = place_prompt(jnp.asarray(
+        np.tile(np.arange(8, dtype=np.int32), (args.batch, 1))), ctx)
     for task in args.tasks.split(",") * 2:
         dt = engine.switch_task(task)
         t0 = time.perf_counter()

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
 from repro.models import linear
-from repro.models.common import apply_rope, rope_freqs
+from repro.models.common import apply_rope, apply_rope_slots, rope_freqs
 
 
 def init(rng, cfg: ModelConfig, d_in: Optional[int] = None) -> dict:
@@ -84,9 +84,35 @@ def apply_train(p: dict, x: jax.Array, cfg: ModelConfig,
     return linear.apply(p["wo"], o, cfg.quant.spec())
 
 
+def _rope_decode(q, k, pos, cfg: ModelConfig):
+    """RoPE for a one-token decode step; pos scalar or (B,) per-slot."""
+    freqs = rope_freqs(cfg)
+    rope = apply_rope_slots if jnp.ndim(pos) == 1 else apply_rope
+    return rope(q, pos, freqs), rope(k, pos, freqs)
+
+
+def _cache_write(buf, val, slot):
+    """Write the new token's K/V (or scale) row(s) into the cache.
+
+    slot scalar: one dynamic_update_slice on the seq dim (lockstep decode).
+    slot (B,): each batch row writes its OWN slot (paged slot pool) — a
+    vmapped single-row update, which lowers to a batch-aligned scatter
+    (per-row indices along the batch dim, so a batch-sharded cache stays
+    shard-local).
+    """
+    val = val.astype(buf.dtype)
+    if jnp.ndim(slot) == 1:
+        return jax.vmap(
+            lambda c, x, s: jax.lax.dynamic_update_slice_in_dim(
+                c, x, s, axis=0))(buf, val, slot)
+    return jax.lax.dynamic_update_slice_in_dim(buf, val, slot, axis=1)
+
+
 def apply_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache_k: jax.Array,
                  cache_v: jax.Array, pos: jax.Array):
-    """One-token decode: x (B, 1, d); cache (B, C, Hkv, D); pos scalar i32.
+    """One-token decode: x (B, 1, d); cache (B, C, Hkv, D); pos scalar i32
+    or a (B,) per-slot position vector (continuous batching: every batch
+    row decodes at its own depth).
 
     Returns (out (B, 1, d_model), new_cache_k, new_cache_v).
     """
@@ -94,12 +120,10 @@ def apply_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache_k: jax.Array,
     cap = cache_k.shape[1]
     q, k, v = _qkv(p, x, cfg)
     if cfg.use_rope:
-        freqs = rope_freqs(cfg)
-        q = apply_rope(q, pos, freqs)
-        k = apply_rope(k, pos, freqs)
+        q, k = _rope_decode(q, k, pos, cfg)
     slot = jnp.mod(pos, cap) if cfg.swa_window is not None else pos
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    cache_k = _cache_write(cache_k, k, slot)
+    cache_v = _cache_write(cache_v, v, slot)
     # visible = slots with index <= pos (ring: all written slots; dense: prefix)
     o = ops.attention(q, cache_k, cache_v, causal=True, offset=pos,
                       impl=cfg.attn_impl)
@@ -127,19 +151,16 @@ def apply_decode_q8(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict,
                     pos: jax.Array):
     """One-token decode against an int8-quantized KV cache (§Perf knob
     kv_cache_dtype='int8').  cache: {k, v: int8 (B,C,H,D); k_scale, v_scale:
-    f16 (B,C,H)}. Returns (out, new_cache)."""
+    f16 (B,C,H)}. pos scalar or (B,) per-slot. Returns (out, new_cache)."""
     b = x.shape[0]
     cap = cache["k"].shape[1]
     q, k, v = _qkv(p, x, cfg)
     if cfg.use_rope:
-        freqs = rope_freqs(cfg)
-        q = apply_rope(q, pos, freqs)
-        k = apply_rope(k, pos, freqs)
+        q, k = _rope_decode(q, k, pos, cfg)
     slot = jnp.mod(pos, cap) if cfg.swa_window is not None else pos
     k8, ks = quantize_kv(k)
     v8, vs = quantize_kv(v)
-    upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
-        buf, val.astype(buf.dtype), slot, axis=1)
+    upd = lambda buf, val: _cache_write(buf, val, slot)
     cache = {"k": upd(cache["k"], k8), "v": upd(cache["v"], v8),
              "k_scale": upd(cache["k_scale"], ks),
              "v_scale": upd(cache["v_scale"], vs)}

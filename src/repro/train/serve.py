@@ -3,8 +3,23 @@
 The deployment half of the paper's pitch: ONE quantized integer backbone in
 memory, per-task scale vectors hot-swapped from a ScaleBank in O(scale-size)
 (§3.3 "swift switching of task-specific parameters").  The engine serves
-greedy generation over a batch; `switch_task` is measured in
-benchmarks/kernel_bench.py against a full-model reload.
+greedy generation; `switch_task` is measured in benchmarks/kernel_bench.py
+against a full-model reload.
+
+Two serving modes:
+
+  * ``generate`` — the lockstep baseline: one batch, every sequence decodes
+    until the LAST one finishes.  Mixed-length traffic pays bubble steps
+    (slots computing tokens nobody asked for).
+  * **continuous batching** — a paged KV slot pool (``open_pool``): the
+    cache batch dim becomes a fixed pool of slots, each with its own
+    position (``pos``), activity bit and task id.  ``admit`` prefills one
+    prompt and writes its KV rows into a free slot; the decode loop runs at
+    ONE compiled shape (n_slots) with a per-slot position VECTOR, and
+    finished sequences are evicted mid-loop so their slot is refilled on
+    the next step.  ``serve`` is the scheduler: arrival-ordered admission,
+    EOS/length eviction, drain-before-switch for mixed-task traffic.
+    Zero bubble steps, zero recompiles per traffic shape.
 
 Mesh mode: construct with a ``dist.context.MeshContext`` (params already
 homed on the mesh per ``dist.sharding.named_shardings``) and the engine
@@ -17,19 +32,106 @@ becomes the serving hot path of the dist subsystem —
     (a sharding constraint on the returned logits, so the jit output stays
     P(batch, model)) and samples with the shard-local argmax of
     ``dist/sampling.py`` — the O(B·V) vocab all-gather disappears from the
-    decode loop, replaced by O(B) scalar reductions.
+    decode loop, replaced by O(B) scalar reductions.  The continuous loop
+    samples through the masked variant (``shard_argmax_masked``), same
+    collective payload.
+  * the slot pool is created THROUGH ``_init_cache`` (jit out_shardings =
+    ``dist.sharding.cache_specs``) and every admit re-constrains it, so the
+    slot dim shards over the data axes exactly like the lockstep batch dim
+    did and post-admit shardings always equal ``cache_specs``.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Optional
+from collections import deque
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.scale_bank import ScaleBank
 from repro.dist import sampling
 from repro.models.registry import ModelAPI
+
+# families whose decode step accepts a per-slot position vector (the
+# attention KV-cache layout; SSM/recurrent families have no position dim
+# and need no paging — their continuous support is a follow-on)
+_CONTINUOUS_FAMILIES = ("dense", "moe", "vlm")
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request for the continuous scheduler.
+
+    ``arrival`` is the decode-step index at which the request becomes
+    admissible — the unit the arrival-simulating driver (launch/serve.py
+    --continuous) speaks.
+    """
+    tokens: np.ndarray                 # (S,) int32 prompt
+    n_new: int                         # generation budget (includes token 0)
+    task: Optional[str] = None         # ScaleBank task the request targets
+    eos_id: Optional[int] = None       # early-stop token
+    arrival: int = 0                   # decode step of arrival
+
+
+class SlotPool:
+    """Paged KV cache: a fixed pool of ``n_slots`` sequence slots.
+
+    Device state: the cache tree (batch dim = slot dim, created sharded per
+    ``cache_specs``).  Host mirrors (one int/bool per slot — the scheduler
+    state): ``pos`` (next absolute position = tokens written so far),
+    ``active``, ``tok`` (last sampled token, the next decode input), and
+    per-slot metadata (request, collected output, task id).
+    """
+
+    def __init__(self, engine: "Engine", n_slots: int, cache_len: int):
+        if n_slots < 1 or cache_len < 1:
+            raise ValueError(f"need n_slots >= 1 and cache_len >= 1, got "
+                             f"({n_slots}, {cache_len})")
+        fam = getattr(engine.api.cfg, "family", None)
+        if fam not in _CONTINUOUS_FAMILIES:
+            raise NotImplementedError(
+                f"continuous batching needs a per-slot-position decode step; "
+                f"family {fam!r} does not provide one (have: "
+                f"{_CONTINUOUS_FAMILIES})")
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.cache = engine._init_cache(n_slots, cache_len)
+        self.pos = np.zeros((n_slots,), np.int32)
+        self.active = np.zeros((n_slots,), bool)
+        self.tok = np.zeros((n_slots,), np.int32)
+        self.meta: List[Optional[dict]] = [None] * n_slots
+        self.task: List[Optional[str]] = [None] * n_slots
+        # device-resident (tok, pos, active) between scheduling events:
+        # steps with no admit/evict reuse the previous step's outputs
+        # instead of re-uploading the host mirrors (3 puts/step saved)
+        self._dev = None
+        # accounting (the benchmark's bubble/utilisation story)
+        self.steps = 0                 # decode steps executed
+        self.decoded = 0               # useful tokens decoded
+        self.bubble_slot_steps = 0     # slot-steps spent on FINISHED seqs
+        self.idle_slot_steps = 0       # inactive slot-steps while work waited
+
+    def free_slot(self) -> Optional[int]:
+        idx = np.flatnonzero(~self.active)
+        return int(idx[0]) if idx.size else None
+
+    def n_active(self) -> int:
+        return int(self.active.sum())
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """What ``Engine.serve`` hands back: per-request tokens + loop stats."""
+    tokens: List[List[int]]            # generated tokens per request
+    steps: int                         # decode steps the pool executed
+    decoded: int                       # useful tokens decoded
+    bubble_slot_steps: int             # 0 by construction (evict-on-finish)
+    idle_slot_steps: int               # arrival gaps / task-drain slack
+    switches: int                      # task switches the scheduler made
+    wall_s: float
 
 
 class Engine:
@@ -50,7 +152,28 @@ class Engine:
         self._decode = jax.jit(self._shard_logits(api.decode_step),
                                donate_argnums=(1,))
         self._samplers = {}
+        self._steppers = {}
         self._cache_inits = {}
+        self._dims = None
+        self._admit_jit = None
+
+    # ----------------------------------------------------------- placement
+    def _cache_dims(self):
+        """(batch_dims, seq_dims) trees for this api's cache layout, both
+        inferred STRUCTURALLY (trace at two extents, diff shapes) — never by
+        extent matching, which breaks on collisions.  Memoized."""
+        if self._dims is None:
+            from repro.dist import sharding as shard_rules
+            # SWA clamps capacity to the window: the seq probe must
+            # straddle the clamp (seq_len < window) to see the dim move.
+            # window == 1 leaves sl = 1 (probe blind), which is fine: a
+            # 1-slot ring never grows, so the equal-shape path covers it.
+            w = getattr(self.api.cfg, "swa_window", None)
+            sl = 8 if w is None else max(1, min(8, w - 1))
+            self._dims = (
+                shard_rules.cache_batch_dims(self.api.init_cache, 2, sl),
+                shard_rules.cache_seq_dims(self.api.init_cache, 2, sl))
+        return self._dims
 
     def _cache_shardings(self, cache, b):
         """NamedSharding tree for the cache at batch ``b`` — the SAME
@@ -61,7 +184,7 @@ class Engine:
         specs = shard_rules.cache_specs(
             ctx, cache, b, ctx.batch_axes(b) is not None,
             n_kv_heads=getattr(self.api.cfg, "n_kv_heads", 0),
-            batch_dims=shard_rules.cache_batch_dims(self.api.init_cache, b))
+            batch_dims=self._cache_dims()[0])
         return jax.tree.map(lambda l, s: ctx.sharding(*s), cache, specs)
 
     def _shard_logits(self, fn):
@@ -100,6 +223,21 @@ class Engine:
                 self.ctx if self.logitshard else None, b))
         return self._samplers[b]
 
+    def _stepper(self, b: int):
+        """Masked sample + next-step input prep in ONE dispatch: returns
+        (tokens (B,), next decode input (B, 1), advanced positions (B,)) so
+        a no-scheduling-event step never round-trips through the host
+        mirrors."""
+        if b not in self._steppers:
+            base = sampling.shard_argmax_masked(
+                self.ctx if self.logitshard else None, b)
+
+            def post(lg, act, pos):
+                t = base(lg, act)
+                return t, t[:, None], pos + act.astype(pos.dtype)
+            self._steppers[b] = jax.jit(post)
+        return self._steppers[b]
+
     # ------------------------------------------------------------- task swap
     def switch_task(self, name: str) -> float:
         """Install task scales; returns wall seconds (paper: 'fast').
@@ -119,10 +257,31 @@ class Engine:
     # ------------------------------------------------------------- generate
     def generate(self, tokens: jnp.ndarray, n_new: int,
                  cache_len: Optional[int] = None) -> jnp.ndarray:
-        """Greedy decode. tokens (B, S) prompt → (B, S + n_new)."""
+        """Greedy decode (LOCKSTEP baseline). tokens (B, S) → (B, S + n_new).
+
+        ``cache_len`` is validated, not clamped: a dense cache too short
+        for the generation would let XLA clamp the out-of-range
+        ``dynamic_update_slice`` writes — every overflowing token would
+        silently overwrite the LAST KV slot instead of erroring.  The
+        deepest write is position prompt+n_new-2 (the final sampled token's
+        KV is never written), so prompt+n_new-1 slots suffice.  Ring
+        (sliding-window) caches wrap by construction, so any positive
+        capacity is legal there.
+        """
         b, s = tokens.shape
         total = s + n_new
-        cache_len = cache_len or total
+        if cache_len is None:
+            cache_len = total
+        elif cache_len <= 0:
+            raise ValueError(
+                f"cache_len={cache_len} must be positive (omit it for the "
+                f"default prompt+n_new={total})")
+        elif (cache_len < total - 1
+              and getattr(self.api.cfg, "swa_window", None) is None):
+            raise ValueError(
+                f"cache_len={cache_len} < prompt+n_new-1={total - 1}: a "
+                f"dense cache cannot hold the generation; XLA would clamp "
+                f"the overflowing writes onto the last KV slot")
         sample = self._sampler(b)
         # prefill builds a cache sized to the prompt; re-home it into a
         # cache with decode headroom
@@ -157,25 +316,269 @@ class Engine:
         return self._cache_inits[key]()
 
     def _grow_cache(self, cache, b, cache_len, s):
-        full = self._init_cache(b, cache_len)
+        """Re-home a prompt-sized prefill cache into one with headroom.
 
-        def place(dst, src):
+        The growth axis is the structurally inferred seq dim
+        (``dist.sharding.cache_seq_dims``), NEVER the first mismatched dim:
+        a first-match pick updates the wrong axis whenever two dims differ
+        (batch-padded prompt cache) or the seq extent collides with another
+        dim.  Any mismatch beyond the seq dim is a caller error and raises.
+        """
+        full = self._init_cache(b, cache_len)
+        sdims = self._cache_dims()[1]
+
+        def place(dst, src, sd):
             if dst.shape == src.shape:
                 return src
+            mism = [i for i, (a, c) in enumerate(zip(dst.shape, src.shape))
+                    if a != c]
+            if sd < 0 or mism != [sd]:
+                raise ValueError(
+                    f"cannot grow cache leaf {src.shape} into {dst.shape}: "
+                    f"dims {mism} differ but only the seq dim ({sd}, "
+                    f"inferred structurally) may grow")
             # prompt cache occupies the first s slots along the seq axis
-            axis = next((i for i, (a, c) in enumerate(zip(dst.shape, src.shape))
-                         if a != c), None)
-            if axis is None:
-                return src
             return jax.lax.dynamic_update_slice_in_dim(
-                dst, src.astype(dst.dtype), 0, axis=axis)
+                dst, src.astype(dst.dtype), 0, axis=sd)
 
-        return jax.tree.map(place, full, cache)
+        return jax.tree.map(place, full, cache, sdims)
+
+    # ------------------------------------------------- continuous batching
+    def open_pool(self, n_slots: int, cache_len: int) -> SlotPool:
+        """Allocate the paged KV slot pool (created sharded on a mesh)."""
+        return SlotPool(self, n_slots, cache_len)
+
+    def _admit_write(self):
+        """Jitted slot write: place a batch-1 prefill cache into slot ``i``
+        of the pool cache (donated — the pool is updated in place).  Writes
+        key on the STRUCTURAL batch dim per leaf; on a mesh the result is
+        re-constrained to ``cache_specs`` so post-admit shardings are the
+        guarded layout."""
+        if self._admit_jit is None:
+            bdims = self._cache_dims()[0]
+            ctx = self.ctx
+
+            def write_all(pool_cache, pcache, slot):
+                def place(dst, src, bd):
+                    if bd < 0:
+                        return dst          # no batch dim: shared, untouched
+                    starts = [0] * dst.ndim
+                    starts[bd] = slot
+                    return jax.lax.dynamic_update_slice(
+                        dst, src.astype(dst.dtype), starts)
+                new = jax.tree.map(place, pool_cache, pcache, bdims)
+                if ctx is not None:
+                    n = next(l.shape[bd] for l, bd in
+                             zip(jax.tree.leaves(new), jax.tree.leaves(bdims))
+                             if bd >= 0)
+                    new = jax.tree.map(
+                        jax.lax.with_sharding_constraint,
+                        new, self._cache_shardings(new, n))
+                return new
+            self._admit_jit = jax.jit(write_all, donate_argnums=(0,))
+        return self._admit_jit
+
+    def _check_admit_shapes(self, pool: SlotPool, pcache):
+        """Static validation: the prefill cache must be batch-1, must fit
+        the pool capacity, and may differ from the pool ONLY on the batch
+        and seq dims."""
+        bdims, sdims = self._cache_dims()
+        for dst, src, bd, sd in zip(jax.tree.leaves(pool.cache),
+                                    jax.tree.leaves(pcache),
+                                    jax.tree.leaves(bdims),
+                                    jax.tree.leaves(sdims)):
+            if bd < 0:
+                continue
+            if src.shape[bd] != 1:
+                raise ValueError(f"admit needs a batch-1 prefill cache, got "
+                                 f"batch {src.shape[bd]} in {src.shape}")
+            if sd >= 0 and src.shape[sd] > dst.shape[sd]:
+                raise ValueError(
+                    f"prompt cache seq extent {src.shape[sd]} exceeds the "
+                    f"pool capacity {dst.shape[sd]}")
+            for d in range(len(dst.shape)):
+                if d not in (bd, sd) and dst.shape[d] != src.shape[d]:
+                    raise ValueError(
+                        f"cache leaf {src.shape} does not fit pool leaf "
+                        f"{dst.shape}: dim {d} differs (only batch dim {bd} "
+                        f"and seq dim {sd} may)")
+
+    def admit(self, pool: SlotPool, request: Request,
+              rid: Optional[int] = None) -> int:
+        """Prefill ``request`` and install it into a free slot. Returns the
+        slot index.  The first generated token is sampled here (from the
+        prefill logits), exactly as the lockstep path does."""
+        slot = pool.free_slot()
+        if slot is None:
+            raise RuntimeError("admit: no free slot (evict first)")
+        toks = np.asarray(request.tokens, np.int32).reshape(-1)
+        s = int(toks.shape[0])
+        n_new = int(request.n_new)
+        if s < 1 or n_new < 1:
+            raise ValueError(f"need prompt >= 1 and n_new >= 1 tokens, got "
+                             f"({s}, {n_new})")
+        if (s + n_new - 1 > pool.cache_len
+                and getattr(self.api.cfg, "swa_window", None) is None):
+            raise ValueError(
+                f"request needs {s + n_new - 1} cache slots, pool has "
+                f"{pool.cache_len}")
+        if (request.task is not None and self.bank is not None
+                and request.task != self.current_task):
+            raise ValueError(
+                f"request targets task {request.task!r} but the engine "
+                f"serves {self.current_task!r}; switch_task first (the "
+                f"scheduler drains the pool before switching)")
+        prompt = jnp.asarray(toks)[None]
+        if self.ctx is not None:
+            prompt = jax.device_put(prompt, self.ctx.sharding())
+        logits, pcache = self._prefill(self.params, {"tokens": prompt})
+        self._check_admit_shapes(pool, pcache)
+        t0 = int(np.asarray(self._sampler(1)(logits))[0])
+        pool.cache = self._admit_write()(pool.cache, pcache, jnp.int32(slot))
+        pool.pos[slot] = s
+        pool.active[slot] = True
+        pool.tok[slot] = t0
+        pool.task[slot] = request.task or self.current_task
+        pool.meta[slot] = {"rid": rid, "request": request, "out": [t0]}
+        pool.decoded += 1
+        pool._dev = None                   # host mirrors changed: re-upload
+        return slot
+
+    def _slot_done(self, pool: SlotPool, slot: int) -> bool:
+        meta = pool.meta[slot]
+        req = meta["request"]
+        out = meta["out"]
+        return (len(out) >= req.n_new
+                or (req.eos_id is not None and out[-1] == req.eos_id))
+
+    def evict(self, pool: SlotPool, slot: int) -> List[int]:
+        """Free a slot mid-loop; returns the tokens it generated.  The KV
+        rows are NOT cleared — every cache position is rewritten before it
+        becomes visible (decode writes position p before attending to it),
+        so stale rows can never leak into a later sequence."""
+        if not pool.active[slot]:
+            raise ValueError(f"slot {slot} is not active")
+        out = pool.meta[slot]["out"]
+        pool.active[slot] = False
+        pool.meta[slot] = None
+        pool.task[slot] = None
+        pool.tok[slot] = 0
+        pool._dev = None                   # host mirrors changed: re-upload
+        return out
+
+    def _pool_inputs(self, pool: SlotPool):
+        """(tok, pos, active) for the decode step — the device-resident
+        copies from the previous step when no scheduling event touched the
+        host mirrors, one batched upload otherwise."""
+        if pool._dev is not None:
+            return pool._dev
+        tok = jnp.asarray(pool.tok.reshape(-1, 1))
+        pos = jnp.asarray(pool.pos)
+        act = jnp.asarray(pool.active)
+        if self.ctx is None:
+            return tok, pos, act
+        ba = self.ctx.batch_axes(pool.n_slots)
+        return jax.device_put(
+            (tok, pos, act),
+            (self.ctx.sharding(ba, None), self.ctx.sharding(),
+             self.ctx.sharding()))
+
+    def step(self, pool: SlotPool) -> np.ndarray:
+        """One continuous decode step over the whole pool: every slot
+        advances by one token at its OWN position; inactive slots compute
+        masked garbage (the price of one fixed compiled shape) and emit the
+        pad token 0.  Returns the (n_slots,) sampled tokens; host metadata
+        (pos/tok/out) is updated for active slots."""
+        if pool.n_active() == 0:
+            raise ValueError("step: no active slot (admit first)")
+        tok, pos, act = self._pool_inputs(pool)
+        logits, pool.cache = self._decode(self.params, pool.cache, tok, pos)
+        t, tok2d, npos = self._stepper(pool.n_slots)(logits, act, pos)
+        nxt = np.asarray(t)
+        pool._dev = (tok2d, npos, act)
+        pool.steps += 1
+        for slot in np.flatnonzero(pool.active):
+            meta = pool.meta[slot]
+            if self._slot_done(pool, slot):
+                # never happens through serve() — eviction is immediate —
+                # but count it honestly for hand-driven pools (and fall
+                # back to the host mirrors, which now disagree with the
+                # device copies' blind position advance)
+                pool.bubble_slot_steps += 1
+                pool._dev = None
+                continue
+            pool.pos[slot] += 1
+            pool.tok[slot] = int(nxt[slot])
+            meta["out"].append(int(nxt[slot]))
+            pool.decoded += 1
+        pool.idle_slot_steps += pool.n_slots - pool.n_active()
+        return nxt
+
+    def serve(self, requests: Sequence[Request], n_slots: int,
+              cache_len: Optional[int] = None) -> ServeReport:
+        """Continuously-batched serving of a request list.
+
+        Scheduler semantics (docs/DIST.md "Serving"):
+          * admission is arrival-ordered FIFO into free slots, gated on
+            ``request.arrival`` (decode-step clock);
+          * a request for a different task than the engine currently
+            serves waits until the pool DRAINS, then the scales are
+            hot-swapped once (one backbone, one live scale set — in-flight
+            sequences must finish under the scales they started with);
+          * eviction is immediate on EOS or budget, so a finished sequence
+            never occupies a decode step (zero bubble slot-steps).
+        """
+        if not requests:
+            return ServeReport(tokens=[], steps=0, decoded=0,
+                               bubble_slot_steps=0, idle_slot_steps=0,
+                               switches=0, wall_s=0.0)
+        if cache_len is None:
+            cache_len = max(int(np.asarray(r.tokens).size) + int(r.n_new)
+                            for r in requests)
+        order = sorted(range(len(requests)),
+                       key=lambda i: (requests[i].arrival, i))
+        queue = deque(order)
+        pool = self.open_pool(n_slots, cache_len)
+        results: List[Optional[List[int]]] = [None] * len(requests)
+        switches = 0
+        t0 = time.perf_counter()
+        while queue or pool.n_active():
+            while queue:
+                rid = queue[0]
+                req = requests[rid]
+                if req.arrival > pool.steps:
+                    break
+                if pool.free_slot() is None:
+                    break
+                if (req.task is not None and self.bank is not None
+                        and req.task != self.current_task):
+                    if pool.n_active():
+                        break               # drain, then swap scales once
+                    self.switch_task(req.task)
+                    switches += 1
+                queue.popleft()
+                slot = self.admit(pool, req, rid=rid)
+                if self._slot_done(pool, slot):
+                    results[rid] = self.evict(pool, slot)
+            if pool.n_active() == 0:
+                if queue:                   # waiting on a future arrival
+                    pool.steps += 1
+                    pool.idle_slot_steps += pool.n_slots
+                    continue
+                break
+            self.step(pool)
+            for slot in np.flatnonzero(pool.active):
+                if self._slot_done(pool, slot):
+                    rid = pool.meta[slot]["rid"]
+                    results[rid] = self.evict(pool, slot)
+        return ServeReport(
+            tokens=results, steps=pool.steps, decoded=pool.decoded,
+            bubble_slot_steps=pool.bubble_slot_steps,
+            idle_slot_steps=pool.idle_slot_steps,
+            switches=switches, wall_s=time.perf_counter() - t0)
 
     # ------------------------------------------------------------ introspect
-    def decode_hlo(self, b: int, cache_len: int) -> str:
-        """Compiled HLO of one decode step at batch ``b`` — what the tests
-        and the serve-smoke CI job scan for vocab-dimension all-gathers."""
+    def _decode_hlo(self, b: int, cache_len: int, pos_aval) -> str:
         def absr(l):
             if isinstance(l, jax.Array):
                 return jax.ShapeDtypeStruct(l.shape, l.dtype,
@@ -191,5 +594,18 @@ class Engine:
                                                   sharding=s),
                 acache, self._cache_shardings(acache, b))
         tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
-        pos = jax.ShapeDtypeStruct((), jnp.int32)
-        return self._decode.lower(aparams, acache, tok, pos).compile().as_text()
+        return self._decode.lower(aparams, acache, tok, pos_aval
+                                  ).compile().as_text()
+
+    def decode_hlo(self, b: int, cache_len: int) -> str:
+        """Compiled HLO of one LOCKSTEP decode step at batch ``b`` — what
+        the tests and the serve-smoke CI job scan for vocab all-gathers."""
+        return self._decode_hlo(b, cache_len,
+                                jax.ShapeDtypeStruct((), jnp.int32))
+
+    def continuous_decode_hlo(self, n_slots: int, cache_len: int) -> str:
+        """Compiled HLO of one CONTINUOUS decode step (per-slot position
+        vector) over an ``n_slots`` pool — the same guard surface: under
+        ``logitshard`` it must contain zero vocab-extent all-gathers."""
+        return self._decode_hlo(n_slots, cache_len,
+                                jax.ShapeDtypeStruct((n_slots,), jnp.int32))

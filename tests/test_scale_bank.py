@@ -108,3 +108,57 @@ def test_switch_unknown_task_raises():
     bank = ScaleBank()
     with pytest.raises(KeyError, match="no task"):
         bank.switch({}, "nope")
+
+
+def test_load_closes_npz_handles(tmp_path, monkeypatch):
+    """``dict(np.load(path))`` kept the NpzFile open for the life of the
+    process — one leaked fd per task on disk.  Track every handle np.load
+    hands out during a disk load and require each one CLOSED (fid/zip are
+    nulled by NpzFile.close) by the time the bank is constructed."""
+    params = _tiny_peqa_params()
+    bank = ScaleBank(root=str(tmp_path))
+    bank.add("base", params)
+    bank.add("taskA", _bump_scales(params, 2.0))
+
+    handles = []
+    orig = np.load
+
+    def tracking_load(*a, **k):
+        h = orig(*a, **k)
+        handles.append(h)
+        return h
+
+    monkeypatch.setattr(np, "load", tracking_load)
+    loaded = ScaleBank(root=str(tmp_path))
+    assert set(loaded.names()) == {"base", "taskA"}
+    assert len(handles) == 2
+    for h in handles:
+        assert h.zip is None and h.fid is None, "NpzFile left open"
+    # and the arrays survived the close (materialised, not lazy views)
+    for path, a in bank.tasks["taskA"].items():
+        np.testing.assert_array_equal(loaded.tasks["taskA"][path], a)
+
+
+def test_corrupt_npz_names_offending_path(tmp_path):
+    (tmp_path / "broken.npz").write_bytes(b"this is not a zip archive")
+    with pytest.raises(ValueError, match="broken.npz"):
+        ScaleBank(root=str(tmp_path))
+
+
+def test_local_nbytes_uses_padded_shard_shape():
+    """When a sharded extent does not divide the model axis, GSPMD pads the
+    last shard and every device still receives ceil(extent/axis) rows —
+    the old ``nbytes // model_size`` under-reported the swap payload."""
+    ctx = type("Ctx", (), {"axis_sizes": {"data": 2, "model": 4},
+                           "model_size": 4})()
+    bank = ScaleBank()
+    bank.tasks["t"] = {
+        # column-parallel: (out=6, G=1) shards out over model=4 -> ceil 2
+        "layers/attn/wq/scale": np.zeros((6, 1), np.float32),
+        # row-parallel scale: replicated, full 6 rows on every device
+        "layers/attn/wo/scale": np.zeros((6, 1), np.float32),
+    }
+    assert bank.nbytes("t") == 48
+    # 2 padded rows * 4B + 6 replicated rows * 4B — NOT 24//4 + 24 = 30
+    assert bank.local_nbytes("t", ctx) == 8 + 24
+    assert bank.local_nbytes("t") == 48

@@ -145,3 +145,98 @@ def test_sharded_serving_subprocess():
                          capture_output=True, text=True, timeout=900,
                          env=subproc_env())
     assert "SUBPROC_OK" in res.stdout, res.stderr[-3000:]
+
+
+_CONT_TEST = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import configs
+    from repro.configs.base import QuantConfig, TuningConfig
+    from repro.core import policies
+    from repro.core import scale_bank as sb
+    from repro.dist import context as dctx
+    from repro.dist import sharding as shard_rules
+    from repro.launch import hlo_stats
+    from repro.launch.serve import place_prompt
+    from repro.models import registry
+    from repro.train.serve import Engine, Request
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    ctx = dctx.make_ctx(mesh)
+    cfg = configs.paper_lm(n_layers=2, d_model=128, n_heads=4, d_ff=256,
+                           vocab=512).replace(
+        tuning=TuningConfig(mode="peqa"), quant=QuantConfig(bits=4, n_grid=2))
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p, _ = policies.prepare(api.init(rng), cfg, rng)
+    p = jax.tree.map(np.asarray, p)
+
+    bank = sb.ScaleBank()
+    bank.add("A", p)
+    rngs = np.random.default_rng(7)
+    bank.tasks["B"] = {k: (v * rngs.uniform(0.5, 1.5, v.shape)
+                           ).astype(v.dtype)
+                       for k, v in bank.tasks["A"].items()}
+
+    host = Engine(api, jax.tree.map(jnp.asarray, p), bank=bank)
+    emesh = Engine(api, jax.device_put(p, shard_rules.named_shardings(ctx, p)),
+                   bank=bank, ctx=ctx, logitshard=True)
+
+    # ---- launcher prompt placement: batch-sharded, not replicated ------
+    prompt = place_prompt(jnp.zeros((4, 8), jnp.int32), ctx)
+    want = ctx.sharding(ctx.data_axes, None)
+    assert prompt.sharding.is_equivalent_to(want, 2), prompt.sharding
+
+    # ---- continuous mesh serving == host serving == lockstep -----------
+    reqs = [Request(tokens=(np.arange(6, dtype=np.int32) * (i + 1)) % 512,
+                    n_new=[4, 7, 3, 9][i % 4],
+                    task=["A", "B"][(i // 4) % 2], arrival=i // 2)
+            for i in range(8)]
+    host.switch_task("A"); emesh.switch_task("A")
+    rep_h = host.serve(reqs, n_slots=4)
+    host.switch_task("A"); emesh.switch_task("A")
+    rep_m = emesh.serve(reqs, n_slots=4)
+    assert rep_m.bubble_slot_steps == 0
+    assert rep_m.switches == rep_h.switches == 1      # drain, swap once
+    for i in range(len(reqs)):
+        assert rep_h.tokens[i] == rep_m.tokens[i], i
+    for i, r in enumerate(reqs):                       # lockstep oracle
+        host.switch_task(r.task)
+        ref = np.asarray(host.generate(
+            jnp.asarray(r.tokens)[None], n_new=r.n_new))[0, 6:]
+        assert np.array_equal(ref, np.asarray(rep_h.tokens[i])), i
+
+    # ---- post-admit slot-pool shardings == cache_specs -----------------
+    emesh.switch_task("A")
+    pool = emesh.open_pool(4, 24)
+    emesh.admit(pool, Request(tokens=np.arange(6, dtype=np.int32), n_new=4,
+                              task="A"))
+    want_sh = emesh._cache_shardings(pool.cache, 4)
+    for leaf, w in zip(jax.tree.leaves(pool.cache),
+                       jax.tree.leaves(want_sh)):
+        assert leaf.sharding.is_equivalent_to(w, leaf.ndim), \\
+            (leaf.shape, leaf.sharding, w)
+
+    # ---- continuous decode HLO: logitshard stays vocab-gather-free -----
+    V = cfg.vocab_size
+    ag = hlo_stats.allgather_extent_count(
+        emesh.continuous_decode_hlo(4, 24), V)
+    assert ag == 0, f"continuous logitshard decode all-gathers vocab: {ag}"
+    ebase = Engine(api, jax.device_put(p, shard_rules.named_shardings(ctx, p)),
+                   bank=bank, ctx=ctx, logitshard=False)
+    ag_b = hlo_stats.allgather_extent_count(
+        ebase.continuous_decode_hlo(4, 24), V)
+    assert ag_b >= 1, "replicated continuous baseline should gather logits"
+    print("SUBPROC_CONT_OK")
+""")
+
+
+def test_continuous_serving_subprocess():
+    """Continuous batching on a (2,4) mesh: token-for-token equality with
+    the host engine and the per-task lockstep oracle, cache_specs-exact
+    post-admit shardings, and a vocab-gather-free continuous decode HLO."""
+    res = subprocess.run([sys.executable, "-c", _CONT_TEST],
+                         capture_output=True, text=True, timeout=900,
+                         env=subproc_env())
+    assert "SUBPROC_CONT_OK" in res.stdout, res.stderr[-3000:]
