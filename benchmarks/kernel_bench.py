@@ -17,6 +17,21 @@
     guards ``--check-sharded`` enforces: zero bubbles, ≥1.5× fewer decode
     steps, post-admit cache shardings == ``cache_specs``, and zero
     vocab-extent all-gathers in the continuous decode HLO.
+  * GEMV roofline: the analytic bytes/token model of the fused dequant
+    GEMV (each packed word streamed from HBM exactly once — checked
+    against the kernel's grid arithmetic) and its ratio over an fp16
+    GEMV; ``--check-sharded`` gates the 4-bit ratio ≥ 3.2×.
+  * Mixed-task serving: 3 tasks round-robin through ``Engine.serve``
+    under both schedulers; gates token-for-token equality, ZERO
+    task-drain idle slot-steps under ``resident`` (>0 under ``drain``),
+    and ≥ 1.2× fewer decode steps — all deterministic counters, so a
+    noisy runner cannot flake the build.  Wall-clock tokens/s is
+    reported unguarded.
+
+``--emit-json DIR`` writes the structured metrics to
+``DIR/BENCH_kernels.json`` and ``DIR/BENCH_serving.json`` (tokens/s,
+bytes/token, swap and drain statistics) — the CI serve-smoke job uploads
+both as build artifacts.
 """
 from __future__ import annotations
 
@@ -34,6 +49,32 @@ from repro.core.quant import QTensor, QuantSpec
 from repro.core.scale_bank import ScaleBank
 from repro.kernels import ops
 from repro.models import registry
+
+
+# structured metrics, populated alongside the human report lines and
+# dumped by --emit-json; "serving" metrics land in BENCH_serving.json,
+# everything else in BENCH_kernels.json
+METRICS: list = []
+
+
+def metric(name: str, value, unit: str = "", **extra):
+    METRICS.append({"name": name, "value": value, "unit": unit, **extra})
+
+
+def emit_json(outdir: str):
+    import json
+    import os
+    os.makedirs(outdir, exist_ok=True)
+    serving_keys = ("sharded", "logitshard", "continuous", "mixed_task")
+    kern = [m for m in METRICS
+            if not any(k in m["name"] for k in serving_keys)]
+    serv = [m for m in METRICS if any(k in m["name"] for k in serving_keys)]
+    for fname, entries in (("BENCH_kernels.json", kern),
+                           ("BENCH_serving.json", serv)):
+        path = os.path.join(outdir, fname)
+        with open(path, "w") as f:
+            json.dump({"metrics": entries}, f, indent=2, sort_keys=True)
+        print(f"[emit-json] wrote {path} ({len(entries)} metrics)")
 
 
 def _time(fn, *args, n=20):
@@ -56,6 +97,91 @@ def traffic_model(report):
         report(f"kernel/traffic_{name}", 0.0,
                f"weight_bytes_per_token={wb / 1e9:.2f}GB "
                f"speedup_vs_fp16={16 / bits:.2f}x (memory-bound regime)")
+
+
+def gemv_roofline(report, check: bool = False) -> bool:
+    """Analytic bytes/token of the fused dequant GEMV + single-stream check.
+
+    The decode GEMV is memory-bound: per token each packed weight word
+    crosses HBM exactly ONCE (grid (N/bn, K/bk); the qw BlockSpec tiles
+    the word array disjointly — checked below against the kernel's own
+    block arithmetic), plus one pass over the (N, G) scale/zero rows.
+    4-bit weights therefore move ~4/16 of the fp16 bytes; the gate
+    requires ≥ 3.2× including the scale overhead at group 128.  NOTE:
+    3-bit codes are stored in 4-bit NIBBLES (PACK = 8/word), so sub-4-bit
+    saves quantization levels, not decode bytes — reported honestly.
+    """
+    from repro.kernels.quant_matmul import (DEFAULT_BLOCK_K, DEFAULT_BLOCK_N,
+                                            PACK, aligned_block_k)
+    from repro.kernels import quant_matmul as qm
+    from repro.kernels import ref as kref
+    from repro.core.quant import QuantSpec
+
+    ok = True
+    L, d, _, d_ff, vocab = configs.PAPER_MODELS["llama-7b"]
+    group = 128
+    for name, (nn, kk) in (("attn_proj", (d, d)), ("mlp_up", (d_ff, d)),
+                           ("mlp_down", (d, d_ff))):
+        g = kk // group
+        qw_b = nn * kk // PACK * 4          # uint32 words, streamed once
+        sz_b = 2 * nn * g * 4               # f32 scale + zero rows
+        act_b = (kk + nn) * 2               # bf16 x in / y out
+        q_total = qw_b + sz_b + act_b
+        fp16_b = nn * kk * 2 + act_b
+        ratio = fp16_b / q_total
+
+        # single-stream invariant from the kernel's own block arithmetic:
+        # the (N/bn, K/bk) grid loads bn*bk/PACK words per tile, disjoint
+        # tiles, so total word-loads must equal the word count exactly
+        bn = min(DEFAULT_BLOCK_N, nn)
+        bk, _, _ = aligned_block_k(kk, min(DEFAULT_BLOCK_K, kk), group)
+        if nn % bn or kk % bk:
+            report(f"kernel/gemv_roofline_{name}", 0.0,
+                   f"FAIL blocks ({bn},{bk}) do not tile ({nn},{kk})")
+            ok = False
+            continue
+        loads = (nn // bn) * (kk // bk) * (bn * bk // PACK)
+        single = loads == nn * kk // PACK
+        if not single:
+            report(f"kernel/gemv_roofline_{name}", 0.0,
+                   f"FAIL qw not single-stream: {loads} word-loads for "
+                   f"{nn * kk // PACK} words")
+            ok = False
+        if check and ratio < 3.2:
+            report(f"kernel/gemv_roofline_{name}", 0.0,
+                   f"FAIL bytes/token ratio {ratio:.2f}x < 3.2x")
+            ok = False
+        report(f"kernel/gemv_roofline_{name}", 0.0,
+               f"bytes/token w4={q_total / 1e6:.2f}MB fp16="
+               f"{fp16_b / 1e6:.2f}MB ratio={ratio:.2f}x "
+               f"(w3 moves the SAME bytes: nibble-packed) "
+               f"single_stream={single}")
+        metric(f"kernel/gemv_roofline_{name}", ratio, "x_vs_fp16",
+               bytes_per_token_w4=q_total, bytes_per_token_fp16=fp16_b,
+               single_stream=bool(single), block_n=bn, block_k=bk)
+
+    # sanity: the GEMV kernel (interpret mode) is bit-exact vs the
+    # blocked-replay oracle at a small shape — the full sweep lives in
+    # tests/test_gemv.py; this keeps the bench self-checking
+    rng = np.random.default_rng(0)
+    m, n, k, grp = 4, 128, 256, 64
+    spec = QuantSpec(bits=4, group_size=grp)
+    qw = jnp.asarray(rng.integers(0, 2 ** 32, size=(n, k // PACK),
+                                  dtype=np.uint32))
+    scale = jnp.asarray(rng.uniform(0.01, 0.1, (n, k // grp)).astype(np.float32))
+    zero = jnp.asarray(rng.uniform(0, 15, (n, k // grp)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    got = qm.quant_gemv_pallas(x, qw, scale, zero, spec=spec, interpret=True)
+    want = kref.quant_gemv_ref(x, qw, scale, zero, (n, k), spec)
+    exact = bool(np.array_equal(np.asarray(got), np.asarray(want)))
+    if not exact:
+        report("kernel/gemv_bitexact", 0.0, "FAIL interpret GEMV != oracle")
+        ok = False
+    else:
+        report("kernel/gemv_bitexact", 0.0,
+               f"interpret GEMV bit-exact vs oracle at ({m},{n},{k},g{grp})")
+    metric("kernel/gemv_bitexact", int(exact), "bool")
+    return ok
 
 
 def xla_path_walltime(report):
@@ -109,6 +235,9 @@ def task_switch(report):
            f"scale_swap={t_switch:.0f}us full_reload={t_reload:.0f}us "
            f"payload={bank.nbytes('A')}B of {total}B model "
            f"({100 * bank.nbytes('A') / total:.1f}%)")
+    metric("kernel/task_switch", t_switch, "us",
+           full_reload_us=t_reload, swap_payload_bytes=bank.nbytes("A"),
+           model_bytes=total)
 
 
 def _serving_cfg():
@@ -197,6 +326,9 @@ def sharded_serving(report, check: bool = False) -> bool:
            f"bytes/device={local_b}B of {total_b}B "
            f"({n // model}x{model} mesh, no swap collectives: "
            f"{coll['total_bytes'] == 0})")
+    metric("kernel/sharded_swap", t_shard, "us", replicated_us=t_repl,
+           bytes_per_device=local_b, total_bytes=total_b,
+           swap_collective_bytes=coll["total_bytes"])
 
     # shard-local sampler: logitshard decode must contain NO vocab-extent
     # all-gather; the replicated baseline shows the one it deletes
@@ -345,15 +477,120 @@ def continuous_serving(report, check: bool = False) -> bool:
            f"steps={rep.steps} vs {lock_steps} ({step_ratio:.2f}x) "
            f"bubbles={rep.bubble_slot_steps} vs {lock_bubbles} "
            f"idle={rep.idle_slot_steps} vocab_allgathers={ag}")
+    metric("kernel/continuous", tokens_total / rep.wall_s, "tok/s",
+           lockstep_tok_s=tokens_total / t_lock, steps=rep.steps,
+           lockstep_steps=lock_steps, step_ratio=step_ratio,
+           bubble_slot_steps=rep.bubble_slot_steps,
+           idle_slot_steps=rep.idle_slot_steps)
+    return ok
+
+
+def mixed_task_serving(report, check: bool = False) -> bool:
+    """Drain-free mixed-task decode: ``resident`` vs ``drain`` scheduler.
+
+    3 tasks round-robin over 12 requests with cycling budgets; both
+    schedulers run from fresh engines built off the SAME host snapshot.
+    Deterministic gates (check mode): token-for-token equality, zero
+    task-drain idle slot-steps under ``resident`` (positive under
+    ``drain``), and ≥ 1.2× fewer decode steps.  Runs on the fake-device
+    mesh when available (exercising the stacked-scale shardings), off-mesh
+    otherwise — the counters are identical either way.
+    """
+    from repro.dist import context as dctx
+    from repro.dist import sharding as shard_rules
+    from repro.train.serve import Engine, Request
+
+    cfg = _serving_cfg()
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p, _ = policies.prepare(api.init(rng), cfg, rng)
+    p = jax.tree.map(np.asarray, p)
+    vocab = cfg.vocab_size
+
+    bank = ScaleBank()
+    bank.add("t0", p)
+    rngs = np.random.default_rng(7)
+    for t in ("t1", "t2"):
+        bank.tasks[t] = {k: (v * rngs.uniform(0.8, 1.2, v.shape)
+                             ).astype(v.dtype)
+                         for k, v in bank.tasks["t0"].items()}
+    tasks = ("t0", "t1", "t2")
+    reqs = [Request(tokens=(np.arange(6, dtype=np.int32) * (i + 1)) % vocab,
+                    n_new=(6, 12, 24)[i % 3], task=tasks[i % 3])
+            for i in range(12)]
+    tokens_total = sum(r.n_new for r in reqs)
+
+    n = jax.device_count()
+    if n >= 2:
+        model = 4 if n % 4 == 0 else 2
+        mesh = jax.make_mesh((n // model, model), ("data", "model"))
+        ctx = dctx.make_ctx(mesh)
+        mk = lambda: Engine(
+            api, jax.device_put(p, shard_rules.named_shardings(ctx, p)),
+            bank=bank, ctx=ctx, logitshard=True)
+    else:
+        ctx = None
+        mk = lambda: Engine(api, jax.tree.map(jnp.asarray, p), bank=bank)
+
+    ok = True
+    reports = {}
+    for sched in ("drain", "resident"):
+        eng = mk()
+        eng.serve(reqs, n_slots=4, scheduler=sched)       # compile warmup
+        eng = mk()
+        reports[sched] = eng.serve(reqs, n_slots=4, scheduler=sched)
+    rd, rr = reports["drain"], reports["resident"]
+
+    for i, (a, b) in enumerate(zip(rd.tokens, rr.tokens)):
+        if a is None or a != b:
+            report("kernel/mixed_task", 0.0,
+                   f"FAIL req{i}: resident tokens diverge from drain")
+            ok = False
+            break
+    if rr.task_drain_idle_slot_steps != 0:
+        report("kernel/mixed_task", 0.0,
+               f"FAIL resident task_drain_idle_slot_steps="
+               f"{rr.task_drain_idle_slot_steps} (must be 0)")
+        ok = False
+    if rd.task_drain_idle_slot_steps <= 0:
+        report("kernel/mixed_task", 0.0,
+               "FAIL drain scheduler shows no task-drain idle (workload "
+               "not exercising the drain tax?)")
+        ok = False
+    step_ratio = rd.steps / max(rr.steps, 1)
+    if check and step_ratio < 1.2:
+        report("kernel/mixed_task", 0.0,
+               f"FAIL step ratio {step_ratio:.2f}x < 1.2x "
+               f"(drain {rd.steps} vs resident {rr.steps})")
+        ok = False
+
+    report("kernel/mixed_task", rr.wall_s * 1e6,
+           f"tok/s resident={tokens_total / rr.wall_s:.0f} "
+           f"drain={tokens_total / rd.wall_s:.0f} "
+           f"steps={rr.steps} vs {rd.steps} ({step_ratio:.2f}x) "
+           f"task_drain_idle={rr.task_drain_idle_slot_steps} vs "
+           f"{rd.task_drain_idle_slot_steps} "
+           f"switches={rr.switches} vs {rd.switches} "
+           f"installs={rr.resident_installs}")
+    metric("kernel/mixed_task", tokens_total / rr.wall_s, "tok/s",
+           drain_tok_s=tokens_total / rd.wall_s,
+           resident_steps=rr.steps, drain_steps=rd.steps,
+           step_ratio=step_ratio,
+           resident_task_drain_idle=rr.task_drain_idle_slot_steps,
+           drain_task_drain_idle=rd.task_drain_idle_slot_steps,
+           resident_installs=rr.resident_installs,
+           switches_resident=rr.switches, switches_drain=rd.switches)
     return ok
 
 
 def run(report):
     traffic_model(report)
+    gemv_roofline(report)
     xla_path_walltime(report)
     task_switch(report)
     sharded_serving(report)
     continuous_serving(report)
+    mixed_task_serving(report)
 
 
 if __name__ == "__main__":
@@ -362,18 +599,29 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--check-sharded", action="store_true",
-                    help="run only the sharded + continuous serving "
-                         "benches; exit 1 on sharding problems / swap "
-                         "collectives / vocab all-gathers / bubble steps "
+                    help="run only the roofline + sharded + continuous + "
+                         "mixed-task serving benches; exit 1 on sharding "
+                         "problems / swap collectives / vocab all-gathers "
+                         "/ bubble steps / bytes-per-token regression / "
+                         "task-drain idle under the resident scheduler "
                          "(the serve-smoke CI gate)")
+    ap.add_argument("--emit-json", metavar="DIR", default=None,
+                    help="write BENCH_kernels.json and BENCH_serving.json "
+                         "into DIR (CI artifacts)")
     args = ap.parse_args()
 
     def _report(n, us, d):
         print(f"{n},{us:.1f},{d}")
 
     if args.check_sharded:
-        passed = sharded_serving(_report, check=True)
+        passed = gemv_roofline(_report, check=True)
+        passed = sharded_serving(_report, check=True) and passed
         passed = continuous_serving(_report, check=True) and passed
+        passed = mixed_task_serving(_report, check=True) and passed
+        if args.emit_json:
+            emit_json(args.emit_json)
         print(f"[check-sharded] {'OK' if passed else 'FAILED'}")
         sys.exit(0 if passed else 1)
     run(_report)
+    if args.emit_json:
+        emit_json(args.emit_json)

@@ -17,7 +17,7 @@ a swap never holds two copies of anything bigger than one scale set.
 from __future__ import annotations
 
 import os
-from typing import Dict, Iterable, Optional
+from typing import Dict, Iterable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -124,6 +124,163 @@ def swap_hlo(params: dict, scales: Dict[str, np.ndarray], ctx) -> str:
         lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=l.sharding)
         if isinstance(l, jax.Array) else l, params)
     return _install_jit_donate.lower(aparams, adev).compile().as_text()
+
+
+def _nest_paths(flat: Dict[str, np.ndarray]) -> dict:
+    """{'a/b/c': arr} → {'a': {'b': {'c': arr}}} (the pruned params mirror)."""
+    out: dict = {}
+    for path, arr in flat.items():
+        node = out
+        parts = path.split("/")
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = arr
+    return out
+
+
+def stack_scales(base: Dict[str, np.ndarray],
+                 task_sets: Sequence[Dict[str, np.ndarray]]) -> dict:
+    """Build the task-stacked scale pytree the slotted decode step consumes.
+
+    ``base`` is ``extract_scales(params, include_zero=True)`` — the backbone's
+    own scale/zero leaves, which double as the fallback row for any path a
+    task set lacks (banks store scales only by default, so zero-points ride
+    along frozen).  Each leaf gains a task dim just before the trailing
+    (out, G) pair: a stacked-over-layers (L, N, G) leaf becomes (L, T, N, G),
+    so ``lax.scan`` slices a (T, N, G) stack per layer — exactly the operand
+    ``quant_gemv_pallas``'s in-kernel task gather wants.  Returned NESTED
+    (mirroring the params tree pruned to scale leaves), host numpy.
+    """
+    flat = {}
+    for path, b in base.items():
+        b = np.asarray(b)
+        rows = []
+        for ts in task_sets:
+            a = np.asarray(ts.get(path, b), dtype=b.dtype)
+            if a.shape != b.shape:
+                raise ValueError(f"scale shape mismatch at {path}: "
+                                 f"{a.shape} vs {b.shape}")
+            rows.append(a)
+        flat[path] = np.stack(rows, axis=max(0, b.ndim - 2))
+    return _nest_paths(flat)
+
+
+def _stack_row_install(stack: dict, rows: dict, idx) -> dict:
+    """Donated write of ONE task's scale rows into stack row ``idx`` — the
+    resident-stack analogue of the swap install.  Every leaf updates along
+    its (replicated) task dim, so like ``_install`` the compiled HLO must
+    contain zero collectives; ``idx`` is traced, so LRU rotation never
+    recompiles."""
+    def upd(dst, src):
+        ax = dst.ndim - 3          # the task dim sits before (out, G)
+        starts = [jnp.int32(0)] * dst.ndim
+        starts[ax] = jnp.int32(idx)
+        return jax.lax.dynamic_update_slice(
+            dst, jnp.expand_dims(src, ax).astype(dst.dtype), starts)
+    return jax.tree.map(upd, stack, rows)
+
+
+_stack_row_install_jit = jax.jit(_stack_row_install, donate_argnums=(0,))
+
+
+class ResidentStack:
+    """Device-resident stacked scale sets for the k hottest serving tasks.
+
+    The drain-free mixed-task decode path (train/serve.py ``scheduler=
+    'resident'``) reads per-slot scales from ``stack`` — the params tree
+    pruned to scale/zero leaves with a task dim of extent ``capacity`` —
+    instead of the live single-task set, so admitting a request for another
+    task never drains the pool.  ``names[r]`` maps row r → resident task.
+    A miss evicts the least-recently-used row NOT pinned by an in-flight
+    slot and installs the new task through the same per-spec ``device_put``
+    + donated jitted write the swap path uses: per-shard bytes only, no
+    transient second stack.  ``ensure`` returns None when every row is
+    pinned — the scheduler decodes one step and retries.
+    """
+
+    def __init__(self, bank: "ScaleBank", params: dict, capacity: int,
+                 ctx=None, warm: Sequence[str] = ()):
+        if capacity < 1:
+            raise ValueError("ResidentStack needs capacity >= 1")
+        self.bank = bank
+        self.capacity = int(capacity)
+        self.ctx = ctx
+        # host snapshot NOW: params' scale buffers may later be donated away
+        # by switch_task installs
+        self._base = extract_scales(params, include_zero=True)
+        warm = [w for w in warm if w in bank.tasks][: self.capacity]
+        self.names: List[Optional[str]] = (
+            warm + [None] * (self.capacity - len(warm)))
+        sets = [bank.tasks[n] if n is not None else self._base
+                for n in self.names]
+        host = stack_scales(self._base, sets)
+        self.stack = self._put(host)
+        self._lru: List[int] = list(range(self.capacity))  # least-recent first
+        self.installs = 0
+
+    def _put(self, tree: dict):
+        if self.ctx is None:
+            return jax.tree.map(jnp.asarray, tree)
+        from repro.dist import sharding as shard_rules
+        return jax.device_put(
+            tree, shard_rules.stacked_scale_shardings(self.ctx, tree))
+
+    def _rows_for(self, name: str) -> dict:
+        task = self.bank.tasks[name]
+        flat = {}
+        for path, b in self._base.items():
+            a = np.asarray(task.get(path, b), dtype=b.dtype)
+            if a.shape != b.shape:
+                raise ValueError(f"scale shape mismatch at {path}: "
+                                 f"{a.shape} vs {b.shape}")
+            flat[path] = a
+        return _nest_paths(flat)
+
+    def _touch(self, row: int):
+        self._lru.remove(row)
+        self._lru.append(row)
+
+    def ensure(self, name: str, pinned: Iterable[str] = ()) -> Optional[int]:
+        """Row serving ``name``, installing on a miss (LRU, pin-aware)."""
+        if name not in self.bank.tasks:
+            raise KeyError(f"no task {name!r}; have {list(self.bank.tasks)}")
+        if name in self.names:
+            row = self.names.index(name)
+            self._touch(row)
+            return row
+        pinned = set(pinned)
+        victim = next((r for r in self._lru if self.names[r] is None), None)
+        if victim is None:
+            victim = next(
+                (r for r in self._lru if self.names[r] not in pinned), None)
+        if victim is None:
+            return None
+        rows = self._put(self._rows_for(name))
+        self.stack = _stack_row_install_jit(self.stack, rows, jnp.int32(victim))
+        self.names[victim] = name
+        self._touch(victim)
+        self.installs += 1
+        return victim
+
+    def install_hlo(self, name: str) -> str:
+        """Compiled HLO of the donated row install — guarded like swap_hlo:
+        the stacked layout must make every install collective-free."""
+        from repro.dist import sharding as shard_rules
+
+        def absr(tree):
+            if self.ctx is None:
+                return jax.tree.map(
+                    lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+            sh = shard_rules.stacked_scale_shardings(self.ctx, tree)
+            return jax.tree.map(
+                lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+                tree, sh)
+
+        astack = absr(self.stack)
+        arows = absr(self._rows_for(name))
+        aidx = jax.ShapeDtypeStruct((), jnp.int32)
+        return _stack_row_install_jit.lower(
+            astack, arows, aidx).compile().as_text()
 
 
 class ScaleBank:

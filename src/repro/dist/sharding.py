@@ -128,6 +128,37 @@ def named_shardings(ctx, tree) -> dict:
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def stacked_scale_specs(tree) -> dict:
+    """PartitionSpec tree for a ``core.scale_bank.ResidentStack`` stack.
+
+    Stacked scale/zero leaves carry a task dim inserted just before the
+    trailing (out, G) pair — (L, N, G) → (L, T, N, G).  Because the path
+    rules above are TRAILING-relative, ``param_specs`` already places them
+    correctly: the task dim lands replicated (it is a leading stack dim like
+    layers), column-parallel scales shard their out dim exactly like the
+    live leaf, and row-parallel scales stay replicated — so a stacked row
+    install moves the same per-shard bytes as a live-set swap and needs no
+    resharding collective (guarded by ResidentStack.install_hlo in the
+    bench).  MoE expert-parallel leaves are NOT coverable this way (their
+    expert dim would collide with the task dim); registry keeps MoE off the
+    slotted decode path.
+    """
+    for kp, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        last = _path_str(kp).split("/")[-1]
+        if last not in ("scale", "zero"):
+            raise ValueError(
+                f"stacked scale tree has non-scale leaf {_path_str(kp)!r}")
+    return param_specs(tree)
+
+
+def stacked_scale_shardings(ctx, tree) -> dict:
+    """``stacked_scale_specs`` as NamedShardings — what ResidentStack hands
+    to ``device_put`` for the stack and for each installed row."""
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s),
+                        stacked_scale_specs(tree),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
 def _probe_dims(init_cache, args1, args2):
     """Trace ``init_cache`` at two argument tuples and return the per-leaf
     index of the first differing dim (``-1`` if none).  Abstract tracing

@@ -35,6 +35,27 @@ from repro.kernels import ref as _ref
 
 _tls = threading.local()
 
+KNOWN_IMPLS = ("pallas", "interpret", "xla", "ref", "autodiff")
+
+# quant_matmul calls with at most this many rows take the decode-shaped GEMV
+# kernel (grid (N/bn, K/bk), whole activation block VMEM-resident) instead of
+# the GEMM tiling — M = n_slots at serve time, so this covers every decode
+# step and small batch-1 prefills.  Forward-only: the custom VJP's backward
+# never dispatches here (training M is large).
+GEMV_MAX_M = 32
+
+
+def _check_impl(impl: str) -> str:
+    """Reject unknown impl strings instead of silently taking the XLA path.
+
+    A typo'd ``REPRO_QMM_IMPL=palas`` used to fall through to XLA and make
+    every 'kernel' run silently benchmark the wrong code."""
+    if impl not in KNOWN_IMPLS:
+        raise ValueError(
+            f"unknown quant_matmul impl {impl!r} (from the impl= argument or "
+            f"REPRO_QMM_IMPL); known: {', '.join(KNOWN_IMPLS)}")
+    return impl
+
 
 @contextlib.contextmanager
 def force_impl(impl: str):
@@ -79,11 +100,17 @@ def _qmm_fwd_impl(x2d, qw, scale, zero, spec: QuantSpec, impl: str,
                   bf16_reduce: bool = False):
     k = x2d.shape[-1]
     if impl in ("pallas", "interpret"):
-        from repro.kernels.quant_matmul import quant_matmul_pallas
+        from repro.kernels import quant_matmul as _qm
 
-        return quant_matmul_pallas(
+        interp = impl == "interpret"
+        if x2d.shape[0] <= GEMV_MAX_M and spec.packs:
+            return _qm.quant_gemv_pallas(
+                x2d, qw, scale.astype(jnp.float32), zero.astype(jnp.float32),
+                spec=spec, interpret=interp,
+            )
+        return _qm.quant_matmul_pallas(
             x2d, qw, scale.astype(jnp.float32), zero.astype(jnp.float32),
-            spec=spec, interpret=(impl == "interpret"),
+            spec=spec, interpret=interp,
         )
     if impl == "ref":
         n = qw.shape[0]
@@ -145,7 +172,7 @@ def quant_matmul(
 ) -> jax.Array:
     """y = x @ Ŵᵀ for arbitrary leading batch dims on x.  Differentiable in
     (x, scale, zero); integer codes are frozen."""
-    impl = impl or default_impl()
+    impl = _check_impl(impl or default_impl())
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2d = x.reshape(-1, k)
@@ -161,6 +188,57 @@ def quant_matmul(
     return y.reshape(*lead, y.shape[-1])
 
 
+def quant_matmul_slotted(
+    x: jax.Array,            # (..., K) with prod(leading dims) == M slots
+    qw: jax.Array,           # (N, K // 8) packed codes — shared backbone
+    scale_stack: jax.Array,  # (T, N, G) per-task scales
+    zero_stack: jax.Array,   # (T, N, G)
+    task_ids: jax.Array,     # (M,) int32 rows into the task stacks
+    spec: QuantSpec,
+    *,
+    impl: Optional[str] = None,
+    bf16_reduce: bool = False,
+) -> jax.Array:
+    """Mixed-task y[i] = x[i] @ Ŵ(task_ids[i])ᵀ — forward-only (serving).
+
+    Slot i's output is BITWISE what ``quant_matmul`` yields when the live
+    scale set is ``scale_stack[task_ids[i]]``: each backend computes every
+    task's result with the plain path's exact expression and keeps the
+    matching rows with a select.  The drain-free scheduler's token-for-token
+    equality with drain-then-swap rests on this (test_gemv.py pins it).
+    No custom VJP: the codes-frozen gradient story stays on quant_matmul.
+    """
+    impl = _check_impl(impl or default_impl())
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = qw.shape[0]
+    x2d = x.reshape(-1, k)
+    if x2d.shape[0] != task_ids.shape[0]:
+        raise ValueError(
+            f"task_ids has {task_ids.shape[0]} rows for {x2d.shape[0]} slots")
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.quant_matmul import quant_gemv_pallas
+
+        y = quant_gemv_pallas(
+            x2d, qw, scale_stack.astype(jnp.float32),
+            zero_stack.astype(jnp.float32), task_ids=task_ids, spec=spec,
+            interpret=(impl == "interpret"),
+        )
+    elif impl == "ref":
+        y = _ref.quant_matmul_tasks_ref(
+            x2d, qw, scale_stack, zero_stack, task_ids, (n, k), spec)
+    else:  # xla / autodiff: per-task plain-path dot + bitwise-exact select
+        y = jnp.zeros((x2d.shape[0], n), x2d.dtype)
+        for t in range(scale_stack.shape[0]):
+            w = _dequant(qw, scale_stack[t], zero_stack[t], k, spec, x2d.dtype)
+            yt = jax.lax.dot_general(
+                x2d, w, dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=None if bf16_reduce else jnp.float32,
+            ).astype(x2d.dtype)
+            y = jnp.where((task_ids == t)[:, None], yt, y)
+    return y.reshape(*lead, n)
+
+
 def dequantize_op(qw, scale, zero, out_features_k: int, spec: QuantSpec,
                   dtype=jnp.bfloat16):
     """Materialize Ŵ (for export / QAT comparisons)."""
@@ -169,7 +247,7 @@ def dequantize_op(qw, scale, zero, out_features_k: int, spec: QuantSpec,
 
 def rtn_pack(w: jax.Array, spec: QuantSpec, *, impl: Optional[str] = None):
     """Fused quantize+pack (min/max RTN). Falls back to jnp off-TPU."""
-    impl = impl or default_impl()
+    impl = _check_impl(impl or default_impl())
     if impl in ("pallas", "interpret"):
         from repro.kernels.rtn_pack import rtn_pack_pallas
 

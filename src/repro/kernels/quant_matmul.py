@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused sub-4-bit dequant + matmul (W{3,4}A16 GEMM/GEMV).
+"""Pallas TPU kernels: fused sub-4-bit dequant + matmul (W{3,4}A16 GEMM/GEMV).
 
 This is the paper's deployment-side win (§3.3): weight-only-quantized LLM
 layers are memory-bound at generation time; streaming b-bit codes instead of
@@ -7,14 +7,29 @@ LUT-GEMM) use CUDA GEMV kernels; the TPU-native adaptation is:
 
   HBM → VMEM : packed uint32 code blocks (bn, bk/8) + per-group scales/zeros
   VMEM → VREG: unpack nibbles with vector shifts/ands on the 8×128 VPU
-  VREG → MXU : dequantized bf16 tile (bn, bk) feeds the 128×128 systolic MXU
+  VREG → MXU : dequantized f32 tile (bn, bk) feeds the 128×128 systolic MXU
 
 LUT-GEMM's warp-shuffle LUT broadcast has no TPU analogue — plain
 unpack+scale on the VPU is the idiomatic equivalent (DESIGN.md §3).
 
-Grid: (M/bm, N/bn, K/bk), K innermost; f32 accumulator lives in a VMEM
-scratch across the K loop.  Per-group scales are applied per K-block, so
-``block_k % group_size == 0`` is required (checked in ops.py).
+Two kernel shapes share the tile math (docs/KERNELS.md):
+
+  * ``quant_matmul_pallas`` — GEMM, grid (M/bm, N/bn, K/bk), K innermost,
+    f32 accumulator in VMEM scratch across the K loop.
+  * ``quant_gemv_pallas``  — decode-shaped GEMV, grid (N/bn, K/bk): M is the
+    slot count (≤ ~32), so the whole (M, bk) activation block stays
+    VMEM-resident and each packed ``qw`` word is streamed from HBM exactly
+    once per token.  An optional ``task_ids: (M,) int32`` operand (scalar-
+    prefetched into SMEM) selects, per slot, one row of (T, N, G)-stacked
+    scales/zeros *inside* the tile loop — slots decoding different PEQA
+    tasks share one kernel launch.
+
+K blocks are picked by ``aligned_block_k``: the largest pack- and
+group-aligned divisor of K at most ``block_k``.  When a quant group itself
+exceeds ``block_k`` (per-channel scales on a large-K layer), the group is
+split across ``blocks_per_group`` K-blocks instead of blowing VMEM with a
+single K block — Ŵ = s·(q − z) is linear in the K-sum, so a group may
+straddle block boundaries exactly.
 
 3-bit weights use the same nibble layout (top bit of each nibble unused) —
 the HBM stream is then 4 bits/weight; true 3-bit packing is a storage-side
@@ -23,6 +38,7 @@ concern handled analytically for the paper's model-size tables (DESIGN.md §6).
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -36,11 +52,50 @@ DEFAULT_BLOCK_N = 128
 DEFAULT_BLOCK_K = 512
 
 
+def aligned_block_k(k: int, block_k: int, group: int,
+                    packs: bool = True) -> tuple:
+    """K-block size for the dequant kernels.
+
+    Returns ``(bk, groups_per_blk, blocks_per_group)`` with ``bk | k`` and
+    ``bk`` a multiple of the pack word (8 nibbles) when ``packs``:
+
+      * group fits a block → bk = largest multiple of lcm(group, 8) that
+        divides k and is ≤ block_k (groups_per_blk ≥ 1, blocks_per_group 1);
+      * group exceeds block_k (per-channel scales, large K) → the group is
+        split: bk = largest pack-aligned divisor of the group ≤ block_k
+        (groups_per_blk 1, blocks_per_group = group // bk).
+
+    The old behaviour — falling back to ``bk = k`` whenever ``k % bk`` —
+    made large-K layers allocate a full-K VMEM tile.
+    """
+    pack = PACK if packs else 1
+    unit = group * pack // math.gcd(group, pack)         # lcm(group, pack)
+    if unit <= block_k:
+        bk = max(c for c in range(unit, block_k + 1, unit) if k % c == 0)
+        return bk, bk // group, 1
+    divs = [c for c in range(pack, block_k + 1, pack) if group % c == 0]
+    bk = max(divs) if divs else group
+    return bk, 1, group // bk
+
+
 def _unpack_nibbles(words: jax.Array, bk: int) -> jax.Array:
     """uint32 (bn, bk/8) → float32 codes (bn, bk)."""
     shifts = jnp.arange(PACK, dtype=jnp.uint32) * 4
     codes = (words[..., None] >> shifts) & jnp.uint32(0xF)
     return codes.reshape(words.shape[0], bk).astype(jnp.float32)
+
+
+def _dequant_tile(codes: jax.Array, scale: jax.Array, zero: jax.Array,
+                  groups_per_blk: int) -> jax.Array:
+    """(bn, bk) f32 codes + (bn, G_blk) scales/zeros → Ŵ tile (bn, bk) f32.
+
+    Groups are contiguous runs of bk/G_blk columns.  Shared by the GEMM and
+    GEMV kernels AND the blocked-replay oracle in ref.py — the bit-exactness
+    tests rely on all of them running this exact expression.
+    """
+    bn, bk = codes.shape
+    cg = codes.reshape(bn, groups_per_blk, bk // groups_per_blk)
+    return (scale[..., None] * (cg - zero[..., None])).reshape(bn, bk)
 
 
 def _qmm_kernel(x_ref, qw_ref, scale_ref, zero_ref, o_ref, acc_ref,
@@ -54,12 +109,7 @@ def _qmm_kernel(x_ref, qw_ref, scale_ref, zero_ref, o_ref, acc_ref,
 
     x = x_ref[...]                                  # (bm, bk)   bf16/f32
     codes = _unpack_nibbles(qw_ref[...], bk)        # (bn, bk)   f32
-    scale = scale_ref[...]                          # (bn, G_blk) f32
-    zero = zero_ref[...]                            # (bn, G_blk) f32
-    bn = codes.shape[0]
-    # dequantize per group: groups are contiguous runs of bk/G_blk columns
-    cg = codes.reshape(bn, groups_per_blk, bk // groups_per_blk)
-    w = (scale[..., None] * (cg - zero[..., None])).reshape(bn, bk)
+    w = _dequant_tile(codes, scale_ref[...], zero_ref[...], groups_per_blk)
     acc_ref[...] += jax.lax.dot_general(
         x.astype(jnp.float32), w,
         dimension_numbers=(((1,), (1,)), ((), ())),  # x @ w.T
@@ -97,13 +147,8 @@ def quant_matmul_pallas(
 
     bm = min(block_m, m)
     bn = min(block_n, n)
-    bk = min(block_k, k)
-    # keep K blocks group- and pack-aligned
-    bk = max((bk // max(group, PACK)) * max(group, PACK), max(group, PACK)) \
-        if group <= bk else k
-    if k % bk:
-        bk = k  # fall back to single K block for awkward shapes
-    groups_per_blk = bk // group
+    bk, groups_per_blk, blocks_per_group = aligned_block_k(
+        k, min(block_k, k), group, spec.packs)
     n_k = k // bk
 
     grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), n_k)
@@ -117,11 +162,158 @@ def quant_matmul_pallas(
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bn, bk // PACK), lambda i, j, kk: (j, kk)),
-            pl.BlockSpec((bn, groups_per_blk), lambda i, j, kk: (j, kk)),
-            pl.BlockSpec((bn, groups_per_blk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, groups_per_blk),
+                         lambda i, j, kk, gd=blocks_per_group: (j, kk // gd)),
+            pl.BlockSpec((bn, groups_per_blk),
+                         lambda i, j, kk, gd=blocks_per_group: (j, kk // gd)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, qw, scale, zero)
+
+
+def _qgemv_kernel(x_ref, qw_ref, scale_ref, zero_ref, o_ref, acc_ref,
+                  *, n_k: int, bk: int, groups_per_blk: int, out_dtype):
+    """One (M, bn) output stripe; K-loop via grid dim 1 (innermost)."""
+    k_idx = pl.program_id(1)
+
+    @pl.when(k_idx == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                  # (M, bk)  VMEM-resident
+    codes = _unpack_nibbles(qw_ref[...], bk)        # (bn, bk) — one HBM visit
+    w = _dequant_tile(codes, scale_ref[...], zero_ref[...], groups_per_blk)
+    acc_ref[...] += jax.lax.dot_general(
+        x.astype(jnp.float32), w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k_idx == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def _qgemv_tasks_kernel(tid_ref, x_ref, qw_ref, scale_ref, zero_ref,
+                        o_ref, acc_ref, *, n_k: int, bk: int,
+                        groups_per_blk: int, n_tasks: int, out_dtype):
+    """Task-stacked GEMV tile: per-slot scale rows selected in-kernel.
+
+    ``tid_ref`` is the scalar-prefetched slot→task map (SMEM); scale/zero
+    blocks carry the full task stack (T, bn, G_blk) in VMEM.  Each task's
+    dequant tile runs the SAME dot as the plain kernel over the full (M, bk)
+    activation block, then a per-slot select keeps the matching row — so a
+    slot's output is bitwise what the plain kernel yields under that task's
+    live scales (the drain/resident scheduler-equality keystone).  The codes
+    are unpacked once and reused across tasks: qw HBM traffic is unchanged.
+    """
+    k_idx = pl.program_id(1)
+
+    @pl.when(k_idx == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    m = x.shape[0]
+    codes = _unpack_nibbles(qw_ref[...], bk)
+    tids = tid_ref[...].reshape(m, 1)               # (M, 1) int32
+    y = jnp.zeros((m, codes.shape[0]), jnp.float32)
+    for t in range(n_tasks):                        # static unroll, T small
+        w_t = _dequant_tile(codes, scale_ref[t], zero_ref[t], groups_per_blk)
+        y_t = jax.lax.dot_general(
+            x.astype(jnp.float32), w_t,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        y = jnp.where(tids == t, y_t, y)
+    acc_ref[...] += y
+
+    @pl.when(k_idx == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def quant_gemv_pallas(
+    x: jax.Array,           # (M, K), M = n_slots (small)
+    qw: jax.Array,          # (N, K // 8) uint32 packed codes
+    scale: jax.Array,       # (N, G) f32 — or (T, N, G) with task_ids
+    zero: jax.Array,        # same shape as scale
+    *,
+    task_ids: jax.Array | None = None,   # (M,) int32 rows into the T stack
+    spec: QuantSpec,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decode-shaped y = x @ Ŵᵀ;  grid (N/bn, K/bk), activations resident.
+
+    Plain call (task_ids None): same math as quant_matmul_pallas with a
+    single M block.  Slotted call: scale/zero are (T, N, G) stacks and
+    ``task_ids[i]`` picks slot i's row inside the tile loop.
+    """
+    if not spec.packs:
+        raise NotImplementedError("quant_gemv_pallas needs packed codes")
+    m, k = x.shape
+    n = qw.shape[0]
+    g = scale.shape[-1]
+    group = k // g
+    out_dtype = out_dtype or x.dtype
+
+    bn = min(block_n, n)
+    bk, groups_per_blk, blocks_per_group = aligned_block_k(
+        k, min(block_k, k), group, spec.packs)
+    n_k = k // bk
+    grid = (pl.cdiv(n, bn), n_k)
+
+    x_spec = pl.BlockSpec((m, bk), lambda j, kk, *_: (0, kk))
+    qw_spec = pl.BlockSpec((bn, bk // PACK), lambda j, kk, *_: (j, kk))
+    out_spec = pl.BlockSpec((m, bn), lambda j, kk, *_: (0, j))
+    scratch = [pltpu.VMEM((m, bn), jnp.float32)]
+    out_shape = jax.ShapeDtypeStruct((m, n), out_dtype)
+
+    if task_ids is None:
+        sz_spec = pl.BlockSpec(
+            (bn, groups_per_blk),
+            lambda j, kk, gd=blocks_per_group: (j, kk // gd))
+        return pl.pallas_call(
+            functools.partial(
+                _qgemv_kernel, n_k=n_k, bk=bk,
+                groups_per_blk=groups_per_blk, out_dtype=out_dtype,
+            ),
+            grid=grid,
+            in_specs=[x_spec, qw_spec, sz_spec, sz_spec],
+            out_specs=out_spec,
+            out_shape=out_shape,
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(x, qw, scale, zero)
+
+    n_tasks = scale.shape[0]
+    sz_spec = pl.BlockSpec(
+        (n_tasks, bn, groups_per_blk),
+        lambda j, kk, *_, gd=blocks_per_group: (0, j, kk // gd))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[x_spec, qw_spec, sz_spec, sz_spec],
+        out_specs=out_spec,
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _qgemv_tasks_kernel, n_k=n_k, bk=bk,
+            groups_per_blk=groups_per_blk, n_tasks=n_tasks,
+            out_dtype=out_dtype,
+        ),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(task_ids.astype(jnp.int32), x, qw, scale, zero)

@@ -30,6 +30,73 @@ def quant_matmul_ref(x, qw, scale, zero, shape, spec: QuantSpec, out_dtype=None)
     return y.astype(out_dtype)
 
 
+def quant_matmul_tasks_ref(x, qw, scale_stack, zero_stack, task_ids, shape,
+                           spec: QuantSpec, out_dtype=None):
+    """Naive mixed-task oracle: y[i] = x[i] @ Ŵ(task_ids[i])ᵀ.
+
+    scale_stack/zero_stack: (T, N, G); task_ids: (M,) rows into the stack.
+    Materializes all T dequantized weights — ground truth only.
+    """
+    out_dtype = out_dtype or x.dtype
+    n, k = shape
+    w_all = jax.vmap(
+        lambda s, z: dequant_ref(qw, s, z, shape, spec, jnp.float32)
+    )(scale_stack, zero_stack)                       # (T, N, K)
+    y = jnp.einsum("mk,mnk->mn", x.astype(jnp.float32), w_all[task_ids],
+                   preferred_element_type=jnp.float32)
+    return y.astype(out_dtype)
+
+
+def quant_gemv_ref(x, qw, scale, zero, shape, spec: QuantSpec, *,
+                   task_ids=None, block_n=None, block_k=None, out_dtype=None):
+    """Blocked REPLAY of quant_gemv_pallas: same tiling, same op order, in
+    plain jnp.  The interpret-mode kernel must match this BIT-EXACTLY (the
+    allclose cross-check against quant_matmul_ref guards the math itself).
+
+    scale/zero: (N, G), or (T, N, G) stacks when task_ids is given.
+    """
+    from repro.kernels.quant_matmul import (
+        DEFAULT_BLOCK_K, DEFAULT_BLOCK_N, PACK, _dequant_tile,
+        _unpack_nibbles, aligned_block_k)
+
+    block_n = block_n or DEFAULT_BLOCK_N
+    block_k = block_k or DEFAULT_BLOCK_K
+    out_dtype = out_dtype or x.dtype
+    n, k = shape
+    m = x.shape[0]
+    group = k // scale.shape[-1]
+    bn = min(block_n, n)
+    bk, gpb, gdiv = aligned_block_k(k, min(block_k, k), group, spec.packs)
+    wpb = bk // PACK
+
+    cols = []
+    for j in range((n + bn - 1) // bn):
+        nsl = slice(j * bn, min((j + 1) * bn, n))
+        acc = jnp.zeros((m, nsl.stop - nsl.start), jnp.float32)
+        for kk in range(k // bk):
+            codes = _unpack_nibbles(qw[nsl, kk * wpb:(kk + 1) * wpb], bk)
+            gsl = slice((kk // gdiv) * gpb, (kk // gdiv) * gpb + gpb)
+            xb = x[:, kk * bk:(kk + 1) * bk].astype(jnp.float32)
+
+            def dot(s, z):
+                w = _dequant_tile(codes, s, z, gpb)
+                return jax.lax.dot_general(
+                    xb, w, dimension_numbers=(((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+
+            if task_ids is None:
+                acc = acc + dot(scale[nsl, gsl], zero[nsl, gsl])
+            else:
+                y = jnp.zeros_like(acc)
+                for t in range(scale.shape[0]):
+                    y = jnp.where(jnp.asarray(task_ids)[:, None] == t,
+                                  dot(scale[t, nsl, gsl], zero[t, nsl, gsl]),
+                                  y)
+                acc = acc + y
+        cols.append(acc)
+    return jnp.concatenate(cols, axis=1).astype(out_dtype)
+
+
 def rtn_pack_ref(w, spec: QuantSpec, n_grid: int = 20):
     """Oracle for the fused RTN quantize+pack kernel = core.quant.rtn_quantize."""
     from repro.core.quant import pack_codes, rtn_quantize

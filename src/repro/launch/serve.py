@@ -20,9 +20,12 @@ all-gather in the loop.  On a CPU-only box, fake the devices first:
 engine: an arrival-simulating driver builds a mixed-length, mixed-task
 request stream (staggered arrivals on the decode-step clock) and pushes it
 through ``Engine.serve`` — paged KV slots, mid-loop admit/evict, per-slot
-positions.  It exits non-zero if any request is dropped or any bubble step
-is observed (a finished sequence occupying a decode step), so CI can run
-it as a smoke gate:
+positions.  ``--scheduler`` picks the mixed-task policy (default ``auto``
+→ ``resident``: stacked per-task scales stay device-resident and decode
+gathers each slot's row in-kernel, no drain-before-switch).  It exits
+non-zero if any request is dropped, any bubble step is observed (a
+finished sequence occupying a decode step), or the resident scheduler
+idles a single slot-step on task drain, so CI can run it as a smoke gate:
 
     REPRO_FAKE_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
         --mesh 2,4 --continuous
@@ -91,7 +94,7 @@ def run_continuous(engine, cfg, args, tasks):
     reqs = mixed_workload(tasks, args.batch, args.n_new,
                           n_requests=3 * args.batch, vocab=cfg.vocab_size)
     t0 = time.perf_counter()
-    rep = engine.serve(reqs, n_slots=args.batch)
+    rep = engine.serve(reqs, n_slots=args.batch, scheduler=args.scheduler)
     wall = time.perf_counter() - t0
     dropped = [i for i, t in enumerate(rep.tokens) if t is None]
     for i, (r, out) in enumerate(zip(reqs, rep.tokens)):
@@ -99,13 +102,20 @@ def run_continuous(engine, cfg, args, tasks):
         print(f"[serve] req{i:02d} task={r.task} n_new={r.n_new} "
               f"arrival={r.arrival} got={got} "
               f"sample={out[:4] if out else []}")
-    print(f"[serve] continuous: {rep.decoded} tokens in {rep.steps} steps "
-          f"({args.batch} slots) tok/s={rep.decoded / wall:.0f} "
+    print(f"[serve] continuous[{rep.scheduler}]: {rep.decoded} tokens in "
+          f"{rep.steps} steps ({args.batch} slots) "
+          f"tok/s={rep.decoded / wall:.0f} "
           f"bubble_slot_steps={rep.bubble_slot_steps} "
-          f"idle_slot_steps={rep.idle_slot_steps} switches={rep.switches}")
+          f"idle_slot_steps={rep.idle_slot_steps} "
+          f"task_drain_idle_slot_steps={rep.task_drain_idle_slot_steps} "
+          f"switches={rep.switches} installs={rep.resident_installs}")
     ok = not dropped and rep.bubble_slot_steps == 0 and all(
         out is not None and len(out) == r.n_new
         for r, out in zip(reqs, rep.tokens))
+    if rep.scheduler == "resident" and rep.task_drain_idle_slot_steps != 0:
+        print(f"[serve] FAIL: resident scheduler idled "
+              f"{rep.task_drain_idle_slot_steps} slot-steps on task drain")
+        ok = False
     print(f"[serve] continuous {'OK' if ok else 'FAILED'}")
     return ok
 
@@ -130,7 +140,16 @@ def main():
                          "mixed-task stream through the continuously-"
                          "batched engine (paged KV slots, mid-loop "
                          "admit/evict); exits 1 on dropped requests or "
-                         "bubble steps")
+                         "bubble steps (and, under the resident "
+                         "scheduler, on ANY task-drain idle slot-step)")
+    ap.add_argument("--scheduler", default="auto",
+                    choices=("auto", "resident", "drain"),
+                    help="mixed-task policy for --continuous: 'resident' "
+                         "keeps stacked per-task scales device-resident "
+                         "and decodes mixed-task slots drain-free via the "
+                         "in-kernel row gather; 'drain' waits the pool "
+                         "out before each scale swap; 'auto' picks "
+                         "resident when supported")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)

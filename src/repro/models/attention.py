@@ -58,13 +58,17 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def _qkv(p, x, cfg: ModelConfig):
+def _qkv(p, x, cfg: ModelConfig, slots=None):
     spec = cfg.quant.spec()
     b, s, _ = x.shape
     dh = cfg.d_head
-    q = linear.apply(p["wq"], x, spec).reshape(b, s, cfg.n_heads, dh)
-    k = linear.apply(p["wk"], x, spec).reshape(b, s, cfg.n_kv_heads, dh)
-    v = linear.apply(p["wv"], x, spec).reshape(b, s, cfg.n_kv_heads, dh)
+    ent = lambda name: linear.slot_entry(slots, name)
+    q = linear.apply(p["wq"], x, spec,
+                     slots=ent("wq")).reshape(b, s, cfg.n_heads, dh)
+    k = linear.apply(p["wk"], x, spec,
+                     slots=ent("wk")).reshape(b, s, cfg.n_kv_heads, dh)
+    v = linear.apply(p["wv"], x, spec,
+                     slots=ent("wv")).reshape(b, s, cfg.n_kv_heads, dh)
     return q, k, v
 
 
@@ -109,16 +113,19 @@ def _cache_write(buf, val, slot):
 
 
 def apply_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache_k: jax.Array,
-                 cache_v: jax.Array, pos: jax.Array):
+                 cache_v: jax.Array, pos: jax.Array, slots=None):
     """One-token decode: x (B, 1, d); cache (B, C, Hkv, D); pos scalar i32
     or a (B,) per-slot position vector (continuous batching: every batch
     row decodes at its own depth).
+
+    slots: optional (task_ids, stacked-scale subtree) — mixed-task decode
+    reads per-slot scale rows in every quantized linear (linear.apply).
 
     Returns (out (B, 1, d_model), new_cache_k, new_cache_v).
     """
     b = x.shape[0]
     cap = cache_k.shape[1]
-    q, k, v = _qkv(p, x, cfg)
+    q, k, v = _qkv(p, x, cfg, slots=slots)
     if cfg.use_rope:
         q, k = _rope_decode(q, k, pos, cfg)
     slot = jnp.mod(pos, cap) if cfg.swa_window is not None else pos
@@ -128,7 +135,8 @@ def apply_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache_k: jax.Array,
     o = ops.attention(q, cache_k, cache_v, causal=True, offset=pos,
                       impl=cfg.attn_impl)
     o = o.reshape(b, 1, cfg.n_heads * cfg.d_head)
-    out = linear.apply(p["wo"], o, cfg.quant.spec())
+    out = linear.apply(p["wo"], o, cfg.quant.spec(),
+                       slots=linear.slot_entry(slots, "wo"))
     return out, cache_k, cache_v
 
 
@@ -148,13 +156,13 @@ def dequantize_kv(q: jax.Array, scale: jax.Array, dtype):
 
 
 def apply_decode_q8(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict,
-                    pos: jax.Array):
+                    pos: jax.Array, slots=None):
     """One-token decode against an int8-quantized KV cache (§Perf knob
     kv_cache_dtype='int8').  cache: {k, v: int8 (B,C,H,D); k_scale, v_scale:
     f16 (B,C,H)}. pos scalar or (B,) per-slot. Returns (out, new_cache)."""
     b = x.shape[0]
     cap = cache["k"].shape[1]
-    q, k, v = _qkv(p, x, cfg)
+    q, k, v = _qkv(p, x, cfg, slots=slots)
     if cfg.use_rope:
         q, k = _rope_decode(q, k, pos, cfg)
     slot = jnp.mod(pos, cap) if cfg.swa_window is not None else pos
@@ -168,7 +176,8 @@ def apply_decode_q8(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict,
     vf = dequantize_kv(cache["v"], cache["v_scale"], x.dtype)
     o = ops.attention(q, kf, vf, causal=True, offset=pos, impl=cfg.attn_impl)
     o = o.reshape(b, 1, cfg.n_heads * cfg.d_head)
-    out = linear.apply(p["wo"], o, cfg.quant.spec())
+    out = linear.apply(p["wo"], o, cfg.quant.spec(),
+                       slots=linear.slot_entry(slots, "wo"))
     return out, cache
 
 

@@ -91,15 +91,20 @@ def mlp_init(rng, cfg: ModelConfig, d_in: int | None = None,
     return p
 
 
-def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig,
+              slots=None) -> jax.Array:
+    """slots: optional (task_ids, stacked-scale subtree) for the mixed-task
+    decode step — threaded into each quantized linear (see linear.apply)."""
     spec = cfg.quant.spec()
-    up = linear.apply(p["up"], x, spec)
+    up = linear.apply(p["up"], x, spec, slots=linear.slot_entry(slots, "up"))
     if "gate" in p:
-        gate = linear.apply(p["gate"], x, spec)
+        gate = linear.apply(p["gate"], x, spec,
+                            slots=linear.slot_entry(slots, "gate"))
         h = jax.nn.silu(gate) * up
     else:
         h = jax.nn.gelu(up)
-    return linear.apply(p["down"], h, spec)
+    return linear.apply(p["down"], h, spec,
+                        slots=linear.slot_entry(slots, "down"))
 
 
 # ---------------------------------------------------------------------------
@@ -122,12 +127,12 @@ def head_init(rng, cfg: ModelConfig) -> dict:
     return {"lm_head": linear.init(rng, cfg.d_model, cfg.vocab_size)}
 
 
-def head_apply(p_head: dict, p_embed: dict, x: jax.Array, cfg: ModelConfig
-               ) -> jax.Array:
+def head_apply(p_head: dict, p_embed: dict, x: jax.Array, cfg: ModelConfig,
+               slots=None) -> jax.Array:
     if cfg.tie_embeddings:
         return jnp.einsum("...d,vd->...v", x, p_embed["emb"].astype(x.dtype),
                           preferred_element_type=jnp.float32)
-    y = linear.apply(p_head["lm_head"], x, cfg.quant.spec())
+    y = linear.apply(p_head["lm_head"], x, cfg.quant.spec(), slots=slots)
     return y.astype(jnp.float32)
 
 

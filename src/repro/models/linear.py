@@ -65,19 +65,46 @@ def _fake_quant(w, scale, zero, spec: QuantSpec):
     return (s * (q - z)).reshape(n, m)
 
 
+def slot_entry(slots, name: str):
+    """Narrow a ``(task_ids, stack_subtree)`` pair to one child module.
+
+    Returns None when there are no slots or the stacked-scale subtree has no
+    entry for ``name`` (unquantized / EXCLUDE'd module) — the caller then
+    takes the plain single-task path.
+    """
+    if slots is None:
+        return None
+    task_ids, subtree = slots
+    if not isinstance(subtree, dict) or name not in subtree:
+        return None
+    return task_ids, subtree[name]
+
+
 def apply(p: dict, x: jax.Array, spec: QuantSpec, *,
           lora_scale: float = 1.0, impl: Optional[str] = None,
-          bf16_reduce: bool = False) -> jax.Array:
+          bf16_reduce: bool = False, slots=None) -> jax.Array:
     """y = x W^T (+b) (+LoRA), storage-mode dispatched on present keys.
 
     bf16_reduce: emit the dot in the activation dtype (the MXU still
     accumulates f32 internally for bf16 inputs); halves the bytes of the
-    TP collectives and of the matmul epilogue — §Perf change A1."""
+    TP collectives and of the matmul epilogue — §Perf change A1.
+
+    slots: optional ``(task_ids (M,), {"scale": (T, out, G), "zero": …})``
+    for the mixed-task decode step — each of the M rows of x (flattened
+    leading dims) reads the scale row its slot's task owns.  Forward-only;
+    ignored for non-peqa storage modes."""
     bf16_reduce = bf16_reduce or getattr(_tls, "bf16", False)
     pet = None if bf16_reduce else jnp.float32
     if "qw" in p:
-        y = ops.quant_matmul(x, p["qw"], p["scale"], p["zero"], spec,
-                             impl=impl, bf16_reduce=bf16_reduce)
+        if slots is not None and isinstance(slots[1], dict) \
+                and "scale" in slots[1]:
+            task_ids, stack = slots
+            y = ops.quant_matmul_slotted(
+                x, p["qw"], stack["scale"], stack["zero"], task_ids, spec,
+                impl=impl, bf16_reduce=bf16_reduce)
+        else:
+            y = ops.quant_matmul(x, p["qw"], p["scale"], p["zero"], spec,
+                                 impl=impl, bf16_reduce=bf16_reduce)
     elif "scale" in p:  # qat fake-quant (w present, scale learned)
         w = _fake_quant(p["w"].astype(x.dtype), p["scale"], p["zero"], spec)
         y = jnp.einsum("...k,nk->...n", x, w, preferred_element_type=pet

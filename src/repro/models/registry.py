@@ -36,6 +36,10 @@ class ModelAPI:
     prefill: Callable         # (params, batch) -> (last_logits, cache)
     decode_step: Callable     # (params, cache, tokens, pos) -> (logits, cache)
     init_cache: Callable      # (batch, seq_len) -> cache pytree
+    # (params, task_stack, cache, tokens, pos, task_ids) -> (logits, cache)
+    # mixed-task decode against (T, …)-stacked scales; None for families that
+    # cannot thread per-slot scales (MoE's shard_map'd experts, SSM, encdec)
+    decode_step_slotted: Optional[Callable] = None
 
     def input_specs(self, shape: ShapeConfig) -> dict:
         return input_specs(self.cfg, shape)
@@ -88,6 +92,9 @@ def build(cfg: ModelConfig) -> ModelAPI:
             prefill=_scoped(cfg, prefill_fn),
             decode_step=_scoped(cfg, lambda p, c, t, pos: transformer.decode_step(p, c, t, pos, cfg)),
             init_cache=lambda b, s: attention.init_cache(cfg, b, s),
+            decode_step_slotted=None if cfg.moe is not None else _scoped(
+                cfg, lambda p, st, c, t, pos, tid: transformer.decode_step(
+                    p, c, t, pos, cfg, task_stack=st, task_ids=tid)),
         )
     if fam == "hybrid":
         return ModelAPI(

@@ -149,35 +149,58 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
 
 
 def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
-                cfg: ModelConfig):
+                cfg: ModelConfig, task_stack: dict | None = None,
+                task_ids: jax.Array | None = None):
     """One decode step. tokens (B, 1); pos scalar int32 (next position).
+
+    task_stack/task_ids (mixed-task continuous decode): ``task_stack``
+    mirrors the params tree pruned to its scale/zero leaves with a task dim
+    stacked in front of the trailing (out, G) dims (scale_bank.stack_scales),
+    and ``task_ids: (B,) int32`` names the stack row each slot reads — the
+    quantized linears gather per-slot scales in-kernel instead of the pool
+    draining for a scale swap.  MoE blocks are not supported slotted (their
+    shard_map'd expert dispatch runs the autodiff impl); registry gates this.
 
     Returns (logits (B, V) f32, new_cache).
     """
     h = common.embed_apply(params["embed"], tokens, cfg)
 
     q8 = cfg.kv_cache_dtype == "int8"
+    slotted = task_stack is not None
 
     def body(h, xs):
-        layer_p, layer_cache = xs
+        if slotted:
+            layer_p, layer_stack, layer_cache = xs
+            slots = (task_ids, layer_stack)
+        else:
+            layer_p, layer_cache = xs
+            slots = None
         hin = common.norm_apply(layer_p["ln1"], h, cfg)
         if q8:
             a, layer_cache = attention.apply_decode_q8(
-                layer_p["attn"], hin, cfg, layer_cache, pos)
+                layer_p["attn"], hin, cfg, layer_cache, pos,
+                slots=linear.slot_entry(slots, "attn"))
         else:
             a, ck, cv = attention.apply_decode(
                 layer_p["attn"], hin, cfg, layer_cache["k"],
-                layer_cache["v"], pos)
+                layer_cache["v"], pos,
+                slots=linear.slot_entry(slots, "attn"))
             layer_cache = {"k": ck, "v": cv}
         h = h + a
         hin = common.norm_apply(layer_p["ln2"], h, cfg)
         if "moe" in layer_p:
             m, _ = moe.apply(layer_p["moe"], hin, cfg)
         else:
-            m = common.mlp_apply(layer_p["mlp"], hin, cfg)
+            m = common.mlp_apply(layer_p["mlp"], hin, cfg,
+                                 slots=linear.slot_entry(slots, "mlp"))
         return h + m, layer_cache
 
-    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+    xs = (params["layers"], task_stack["layers"], cache) if slotted \
+        else (params["layers"], cache)
+    h, new_cache = jax.lax.scan(body, h, xs)
     h = common.norm_apply(params["final_norm"], h, cfg)
-    logits = common.head_apply(params, params["embed"], h, cfg)
+    head_slots = linear.slot_entry((task_ids, task_stack), "lm_head") \
+        if slotted else None
+    logits = common.head_apply(params, params["embed"], h, cfg,
+                               slots=head_slots)
     return logits[:, 0], new_cache

@@ -18,7 +18,11 @@ Two serving modes:
     ONE compiled shape (n_slots) with a per-slot position VECTOR, and
     finished sequences are evicted mid-loop so their slot is refilled on
     the next step.  ``serve`` is the scheduler: arrival-ordered admission,
-    EOS/length eviction, drain-before-switch for mixed-task traffic.
+    EOS/length eviction, and one of two mixed-task policies — ``drain``
+    (drain-before-switch, one live scale set) or ``resident`` (scales for
+    the k hottest tasks stay device-resident stacked ``(T, out, G)``;
+    decode gathers each slot's row in-kernel through
+    ``decode_step_slotted``, so admission never waits on a task mismatch).
     Zero bubble steps, zero recompiles per traffic shape.
 
 Mesh mode: construct with a ``dist.context.MeshContext`` (params already
@@ -51,7 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.scale_bank import ScaleBank
+from repro.core.scale_bank import ResidentStack, ScaleBank
 from repro.dist import sampling
 from repro.models.registry import ModelAPI
 
@@ -102,6 +106,8 @@ class SlotPool:
         self.pos = np.zeros((n_slots,), np.int32)
         self.active = np.zeros((n_slots,), bool)
         self.tok = np.zeros((n_slots,), np.int32)
+        self.tid = np.zeros((n_slots,), np.int32)   # resident-stack row
+        self.slotted = False           # decode through the stacked-scale step
         self.meta: List[Optional[dict]] = [None] * n_slots
         self.task: List[Optional[str]] = [None] * n_slots
         # device-resident (tok, pos, active) between scheduling events:
@@ -113,6 +119,10 @@ class SlotPool:
         self.decoded = 0               # useful tokens decoded
         self.bubble_slot_steps = 0     # slot-steps spent on FINISHED seqs
         self.idle_slot_steps = 0       # inactive slot-steps while work waited
+        # subset of idle_slot_steps: slots empty ONLY because an admissible
+        # request targets a task the scheduler cannot co-run (drain-before-
+        # switch, or resident stack full of pinned rows)
+        self.task_drain_idle_slot_steps = 0
 
     def free_slot(self) -> Optional[int]:
         idx = np.flatnonzero(~self.active)
@@ -132,6 +142,11 @@ class ServeReport:
     idle_slot_steps: int               # arrival gaps / task-drain slack
     switches: int                      # task switches the scheduler made
     wall_s: float
+    # idle slot-steps attributable to task incompatibility alone (the cost
+    # the resident scheduler exists to delete; 0 under ``resident``)
+    task_drain_idle_slot_steps: int = 0
+    resident_installs: int = 0         # stack rows (re)installed this serve
+    scheduler: str = "drain"           # which admission policy actually ran
 
 
 class Engine:
@@ -148,9 +163,13 @@ class Engine:
                 f"logitshard needs vocab {api.cfg.vocab_size} divisible by "
                 f"the model axis ({ctx.model_size})")
         self.current_task: Optional[str] = None
+        # device-resident stacked scales for the drain-free mixed-task
+        # scheduler; built lazily by serve(scheduler="resident"/"auto")
+        self.resident: Optional[ResidentStack] = None
         self._prefill = jax.jit(self._shard_logits(api.prefill))
         self._decode = jax.jit(self._shard_logits(api.decode_step),
                                donate_argnums=(1,))
+        self._decode_slotted = None
         self._samplers = {}
         self._steppers = {}
         self._cache_inits = {}
@@ -237,6 +256,22 @@ class Engine:
                 return t, t[:, None], pos + act.astype(pos.dtype)
             self._steppers[b] = jax.jit(post)
         return self._steppers[b]
+
+    def _slotted_decode_fn(self):
+        """Jitted mixed-task decode step: ``(params, task_stack, cache, tok,
+        pos, task_ids) -> (logits, cache)``, cache donated exactly like the
+        plain decode step.  Lazy: families without ``decode_step_slotted``
+        never pay for it (and raise only if the resident scheduler is
+        actually requested)."""
+        if self._decode_slotted is None:
+            if self.api.decode_step_slotted is None:
+                raise NotImplementedError(
+                    f"family {getattr(self.api.cfg, 'family', None)!r} has no "
+                    f"slotted decode step (decode_step_slotted is None)")
+            self._decode_slotted = jax.jit(
+                self._shard_logits(self.api.decode_step_slotted),
+                donate_argnums=(2,))
+        return self._decode_slotted
 
     # ------------------------------------------------------------- task swap
     def switch_task(self, name: str) -> float:
@@ -467,7 +502,7 @@ class Engine:
         return out
 
     def _pool_inputs(self, pool: SlotPool):
-        """(tok, pos, active) for the decode step — the device-resident
+        """(tok, pos, active, tid) for the decode step — the device-resident
         copies from the previous step when no scheduling event touched the
         host mirrors, one batched upload otherwise."""
         if pool._dev is not None:
@@ -475,13 +510,14 @@ class Engine:
         tok = jnp.asarray(pool.tok.reshape(-1, 1))
         pos = jnp.asarray(pool.pos)
         act = jnp.asarray(pool.active)
+        tid = jnp.asarray(pool.tid)
         if self.ctx is None:
-            return tok, pos, act
+            return tok, pos, act, tid
         ba = self.ctx.batch_axes(pool.n_slots)
         return jax.device_put(
-            (tok, pos, act),
+            (tok, pos, act, tid),
             (self.ctx.sharding(ba, None), self.ctx.sharding(),
-             self.ctx.sharding()))
+             self.ctx.sharding(), self.ctx.sharding()))
 
     def step(self, pool: SlotPool) -> np.ndarray:
         """One continuous decode step over the whole pool: every slot
@@ -491,11 +527,16 @@ class Engine:
         (pos/tok/out) is updated for active slots."""
         if pool.n_active() == 0:
             raise ValueError("step: no active slot (admit first)")
-        tok, pos, act = self._pool_inputs(pool)
-        logits, pool.cache = self._decode(self.params, pool.cache, tok, pos)
+        tok, pos, act, tid = self._pool_inputs(pool)
+        if pool.slotted:
+            logits, pool.cache = self._slotted_decode_fn()(
+                self.params, self.resident.stack, pool.cache, tok, pos, tid)
+        else:
+            logits, pool.cache = self._decode(self.params, pool.cache,
+                                              tok, pos)
         t, tok2d, npos = self._stepper(pool.n_slots)(logits, act, pos)
         nxt = np.asarray(t)
-        pool._dev = (tok2d, npos, act)
+        pool._dev = (tok2d, npos, act, tid)
         pool.steps += 1
         for slot in np.flatnonzero(pool.active):
             meta = pool.meta[slot]
@@ -514,20 +555,70 @@ class Engine:
         pool.idle_slot_steps += pool.n_slots - pool.n_active()
         return nxt
 
+    def _resident_supported(self, requests: Sequence[Request]) -> bool:
+        """Can the RESIDENT scheduler run this workload?  Needs a ScaleBank,
+        a family with a slotted decode step, and every request tasked (an
+        untasked request has no stack row to read)."""
+        return (self.bank is not None
+                and self.api.decode_step_slotted is not None
+                and len(requests) > 0
+                and all(r.task is not None for r in requests))
+
+    def _ensure_resident(self, resident_tasks: int) -> ResidentStack:
+        cap = max(2, min(int(resident_tasks), len(self.bank.tasks)))
+        if self.resident is None or self.resident.capacity != cap:
+            self.resident = ResidentStack(self.bank, self.params, cap,
+                                          ctx=self.ctx)
+        return self.resident
+
     def serve(self, requests: Sequence[Request], n_slots: int,
-              cache_len: Optional[int] = None) -> ServeReport:
+              cache_len: Optional[int] = None, *,
+              scheduler: str = "auto",
+              resident_tasks: int = 4) -> ServeReport:
         """Continuously-batched serving of a request list.
 
         Scheduler semantics (docs/DIST.md "Serving"):
           * admission is arrival-ordered FIFO into free slots, gated on
             ``request.arrival`` (decode-step clock);
-          * a request for a different task than the engine currently
-            serves waits until the pool DRAINS, then the scales are
-            hot-swapped once (one backbone, one live scale set — in-flight
-            sequences must finish under the scales they started with);
           * eviction is immediate on EOS or budget, so a finished sequence
-            never occupies a decode step (zero bubble slot-steps).
+            never occupies a decode step (zero bubble slot-steps);
+          * mixed-task traffic, ``scheduler`` =
+
+            - ``"drain"`` — a request for a different task than the engine
+              currently serves waits until the pool DRAINS, then the scales
+              are hot-swapped once (one backbone, one live scale set —
+              in-flight sequences must finish under the scales they started
+              with).  The wait is metered as
+              ``task_drain_idle_slot_steps``.
+            - ``"resident"`` — up to ``resident_tasks`` tasks' scales stay
+              device-resident stacked ``(T, out, G)`` (``ResidentStack``,
+              LRU over stack rows); decode reads each slot's row via the
+              in-kernel gather of ``decode_step_slotted``, so admission
+              never waits on a task mismatch.  ``switch_task`` still runs
+              at admit (live scales feed the PREFILL; decode ignores them),
+              which pins token-for-token equality with ``drain``.  The only
+              residual wait is a FULL stack of pinned (in-flight) rows —
+              impossible when ``resident_tasks`` > n_slots — still metered
+              honestly in ``task_drain_idle_slot_steps``.
+            - ``"auto"`` — ``resident`` when supported (ScaleBank attached,
+              family has a slotted decode step, every request tasked),
+              ``drain`` otherwise.
+
+        Requesting ``"resident"`` on an unsupported workload raises;
+        ``report.scheduler`` records which policy actually ran.
         """
+        if scheduler not in ("auto", "resident", "drain"):
+            raise ValueError(f"unknown scheduler {scheduler!r} "
+                             f"(know: auto, resident, drain)")
+        use_resident = (scheduler != "drain"
+                        and self._resident_supported(requests))
+        if scheduler == "resident" and not use_resident:
+            missing = ("no ScaleBank attached" if self.bank is None
+                       else "family has no slotted decode step"
+                       if self.api.decode_step_slotted is None
+                       else "not every request names a task")
+            raise ValueError(f"scheduler='resident' unsupported here: "
+                             f"{missing}")
         if not requests:
             return ServeReport(tokens=[], steps=0, decoded=0,
                                bubble_slot_steps=0, idle_slot_steps=0,
@@ -535,14 +626,20 @@ class Engine:
         if cache_len is None:
             cache_len = max(int(np.asarray(r.tokens).size) + int(r.n_new)
                             for r in requests)
+        if use_resident:
+            self._slotted_decode_fn()           # raise early if unsupported
+            resident = self._ensure_resident(resident_tasks)
+            installs0 = resident.installs
         order = sorted(range(len(requests)),
                        key=lambda i: (requests[i].arrival, i))
         queue = deque(order)
         pool = self.open_pool(n_slots, cache_len)
+        pool.slotted = use_resident
         results: List[Optional[List[int]]] = [None] * len(requests)
         switches = 0
         t0 = time.perf_counter()
         while queue or pool.n_active():
+            blocked_by_task = False
             while queue:
                 rid = queue[0]
                 req = requests[rid]
@@ -550,14 +647,33 @@ class Engine:
                     break
                 if pool.free_slot() is None:
                     break
-                if (req.task is not None and self.bank is not None
-                        and req.task != self.current_task):
-                    if pool.n_active():
-                        break               # drain, then swap scales once
-                    self.switch_task(req.task)
-                    switches += 1
-                queue.popleft()
-                slot = self.admit(pool, req, rid=rid)
+                if use_resident:
+                    pinned = {pool.task[s]
+                              for s in np.flatnonzero(pool.active)}
+                    row = resident.ensure(req.task, pinned=pinned)
+                    if row is None:         # every row pinned by in-flight
+                        blocked_by_task = True
+                        break
+                    if req.task != self.current_task:
+                        # switch-before-prefill: the live scales feed ONLY
+                        # this request's prefill; decoding slots read the
+                        # stack and never see the swap — no drain
+                        self.switch_task(req.task)
+                        switches += 1
+                    queue.popleft()
+                    slot = self.admit(pool, req, rid=rid)
+                    pool.tid[slot] = row
+                    pool._dev = None
+                else:
+                    if (req.task is not None and self.bank is not None
+                            and req.task != self.current_task):
+                        if pool.n_active():
+                            blocked_by_task = True
+                            break           # drain, then swap scales once
+                        self.switch_task(req.task)
+                        switches += 1
+                    queue.popleft()
+                    slot = self.admit(pool, req, rid=rid)
                 if self._slot_done(pool, slot):
                     results[rid] = self.evict(pool, slot)
             if pool.n_active() == 0:
@@ -566,7 +682,12 @@ class Engine:
                     pool.idle_slot_steps += pool.n_slots
                     continue
                 break
+            n_act = pool.n_active()
             self.step(pool)
+            if blocked_by_task:
+                # the free slots this step could have hosted the blocked
+                # request — the drain tax the resident scheduler deletes
+                pool.task_drain_idle_slot_steps += pool.n_slots - n_act
             for slot in np.flatnonzero(pool.active):
                 if self._slot_done(pool, slot):
                     rid = pool.meta[slot]["rid"]
@@ -575,7 +696,11 @@ class Engine:
             tokens=results, steps=pool.steps, decoded=pool.decoded,
             bubble_slot_steps=pool.bubble_slot_steps,
             idle_slot_steps=pool.idle_slot_steps,
-            switches=switches, wall_s=time.perf_counter() - t0)
+            switches=switches, wall_s=time.perf_counter() - t0,
+            task_drain_idle_slot_steps=pool.task_drain_idle_slot_steps,
+            resident_installs=(resident.installs - installs0
+                               if use_resident else 0),
+            scheduler="resident" if use_resident else "drain")
 
     # ------------------------------------------------------------ introspect
     def _decode_hlo(self, b: int, cache_len: int, pos_aval) -> str:
@@ -609,3 +734,35 @@ class Engine:
         ``logitshard`` it must contain zero vocab-extent all-gathers."""
         return self._decode_hlo(n_slots, cache_len,
                                 jax.ShapeDtypeStruct((n_slots,), jnp.int32))
+
+    def slotted_decode_hlo(self, n_slots: int, cache_len: int,
+                           resident_tasks: int = 4) -> str:
+        """Compiled HLO of one MIXED-TASK decode step (stacked scales +
+        per-slot task ids) — the resident scheduler's guard surface.  Same
+        collective rules as ``continuous_decode_hlo`` apply; the stacked
+        scales additionally must introduce no new gather collectives (the
+        row select is shard-local: the task dim is replicated and the scale
+        out-dim sharding matches the plain scales')."""
+        if self.bank is None:
+            raise ValueError("slotted_decode_hlo needs a ScaleBank")
+        resident = self._ensure_resident(resident_tasks)
+
+        def absr(l):
+            if isinstance(l, jax.Array):
+                return jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                            sharding=l.sharding)
+            return l
+        aparams = jax.tree.map(absr, self.params)
+        astack = jax.tree.map(absr, resident.stack)
+        acache = jax.eval_shape(
+            lambda: self.api.init_cache(n_slots, cache_len))
+        if self.ctx is not None:
+            acache = jax.tree.map(
+                lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                                  sharding=s),
+                acache, self._cache_shardings(acache, n_slots))
+        tok = jax.ShapeDtypeStruct((n_slots, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
+        tid = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
+        return self._slotted_decode_fn().lower(
+            aparams, astack, acache, tok, pos, tid).compile().as_text()

@@ -1,0 +1,173 @@
+"""Fused dequant GEMV (decode path): interpret-mode kernels vs oracles.
+
+Three layers of evidence, strongest first:
+
+  * BIT-exactness against the blocked-replay oracle
+    (``ref.quant_gemv_ref`` walks the same (block_n, block_k) tiles in the
+    same order with the same dequant expression) — any drift in tiling,
+    accumulation order or dequant math fails exactly.
+  * allclose against the naive oracle (full dequant + one einsum) — guards
+    the MATH while the replay guards the MECHANICS.
+  * the slotted equality contract: rows of the task-stacked GEMV where
+    ``task_ids == t`` must be BIT-equal to the plain GEMV under task t's
+    scales.  This is what makes the resident scheduler token-for-token
+    equal to drain-then-swap (tests/test_serve_mixed_task.py builds on it).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.quant import QTensor, QuantSpec
+from repro.kernels import ops, ref
+from repro.kernels import quant_matmul as qm
+
+BN, BK = 64, 128  # force multi-block grids at test shapes
+
+
+def _make(n, k, group, bits, m, seed=0):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32) * 0.05)
+    spec = QuantSpec(bits=bits, group_size=group)
+    qt = QTensor.quantize(w, spec, n_grid=2)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    return x, qt, spec
+
+
+def _stacks(qt, n_tasks, seed=1):
+    """(T, N, G) scale/zero stacks: task 0 = the base, others perturbed."""
+    rng = np.random.default_rng(seed)
+    scales = [np.asarray(qt.scale)]
+    zeros = [np.asarray(qt.zero)]
+    for _ in range(n_tasks - 1):
+        scales.append(scales[0] * rng.uniform(0.8, 1.2,
+                                              scales[0].shape).astype(
+                                                  scales[0].dtype))
+        zeros.append(zeros[0])
+    return jnp.asarray(np.stack(scales)), jnp.asarray(np.stack(zeros))
+
+
+@pytest.mark.parametrize("group", [32, 64, 128, None])
+@pytest.mark.parametrize("bits", [3, 4])
+def test_gemv_bitexact_vs_blocked_replay(group, bits):
+    # n=96 does not divide block_n=64 (padded edge tile); k=256 spans
+    # multiple K blocks for every group choice
+    x, qt, spec = _make(96, 256, group, bits, m=4, seed=bits)
+    got = qm.quant_gemv_pallas(x, qt.qw, qt.scale, qt.zero, spec=spec,
+                               block_n=BN, block_k=BK, interpret=True)
+    want = ref.quant_gemv_ref(x, qt.qw, qt.scale, qt.zero, qt.shape, spec,
+                              block_n=BN, block_k=BK)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    naive = ref.quant_matmul_ref(x, qt.qw, qt.scale, qt.zero, qt.shape, spec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(naive),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("group,bits", [(64, 4), (32, 3), (None, 4)])
+def test_gemv_tasks_bitexact_vs_blocked_replay(group, bits):
+    x, qt, spec = _make(96, 256, group, bits, m=5, seed=7)
+    scale_s, zero_s = _stacks(qt, 3)
+    tids = jnp.asarray([0, 1, 2, 0, 1], jnp.int32)   # >= 3 distinct tasks
+    got = qm.quant_gemv_pallas(x, qt.qw, scale_s, zero_s, task_ids=tids,
+                               spec=spec, block_n=BN, block_k=BK,
+                               interpret=True)
+    want = ref.quant_gemv_ref(x, qt.qw, scale_s, zero_s, qt.shape, spec,
+                              task_ids=tids, block_n=BN, block_k=BK)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    naive = ref.quant_matmul_tasks_ref(x, qt.qw, scale_s, zero_s, tids,
+                                       qt.shape, spec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(naive),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_gemv_tasks_rows_equal_plain_per_task():
+    """The scheduler-equality contract: row i of the stacked GEMV ==
+    the SAME row of the plain GEMV run wholly under task tids[i]."""
+    x, qt, spec = _make(64, 256, 64, 4, m=6, seed=3)
+    scale_s, zero_s = _stacks(qt, 3)
+    tids = np.asarray([0, 1, 2, 2, 1, 0], np.int32)
+    got = np.asarray(qm.quant_gemv_pallas(
+        x, qt.qw, scale_s, zero_s, task_ids=jnp.asarray(tids), spec=spec,
+        block_n=BN, block_k=BK, interpret=True))
+    for t in range(3):
+        plain = np.asarray(qm.quant_gemv_pallas(
+            x, qt.qw, scale_s[t], zero_s[t], spec=spec,
+            block_n=BN, block_k=BK, interpret=True))
+        rows = tids == t
+        np.testing.assert_array_equal(got[rows], plain[rows])
+
+
+def test_slotted_xla_rows_equal_plain_xla_per_task():
+    """Same contract on the XLA fallback impl (what CPU serving runs)."""
+    x, qt, spec = _make(64, 256, 64, 4, m=6, seed=5)
+    scale_s, zero_s = _stacks(qt, 3)
+    tids = np.asarray([0, 1, 2, 2, 1, 0], np.int32)
+    got = np.asarray(ops.quant_matmul_slotted(
+        x, qt.qw, scale_s, zero_s, jnp.asarray(tids), spec, impl="xla"))
+    for t in range(3):
+        plain = np.asarray(ops.quant_matmul(
+            x, qt.qw, scale_s[t], zero_s[t], spec, impl="xla"))
+        rows = tids == t
+        np.testing.assert_array_equal(got[rows], plain[rows])
+
+
+def test_gemv_dispatch_threshold(monkeypatch):
+    """ops.quant_matmul routes decode-shaped calls (m <= GEMV_MAX_M) to the
+    GEMV kernel and large-m calls to the GEMM kernel."""
+    calls = []
+    orig = qm.quant_gemv_pallas
+
+    def spy(*a, **kw):
+        calls.append(a[0].shape)
+        return orig(*a, **kw)
+    monkeypatch.setattr(qm, "quant_gemv_pallas", spy)
+
+    x, qt, spec = _make(64, 256, 64, 4, m=4, seed=9)
+    ops.quant_matmul(x, qt.qw, qt.scale, qt.zero, spec, impl="interpret")
+    assert calls == [(4, 256)]
+
+    big = jnp.tile(x, (ops.GEMV_MAX_M // 4 + 1, 1))
+    assert big.shape[0] > ops.GEMV_MAX_M
+    ops.quant_matmul(big, qt.qw, qt.scale, qt.zero, spec, impl="interpret")
+    assert calls == [(4, 256)]                       # GEMM path: no new call
+
+
+def test_unknown_impl_raises(monkeypatch):
+    """Regression: a typo'd impl must raise, never silently fall back to
+    the XLA path (REPRO_QMM_IMPL=palas used to serve wrong-codepath runs)."""
+    x, qt, spec = _make(32, 64, 32, 4, m=2, seed=11)
+    with pytest.raises(ValueError, match="palas"):
+        ops.quant_matmul(x, qt.qw, qt.scale, qt.zero, spec, impl="palas")
+    monkeypatch.setenv("REPRO_QMM_IMPL", "palas")
+    with pytest.raises(ValueError, match="REPRO_QMM_IMPL"):
+        ops.quant_matmul(x, qt.qw, qt.scale, qt.zero, spec)
+    with pytest.raises(ValueError, match="palas"):
+        ops.rtn_pack(jnp.zeros((8, 64), jnp.float32), spec)
+
+
+def test_aligned_block_k():
+    """Regression for the bk=k VMEM blow-up: on k % block_k != 0 the block
+    picker must choose the largest pack/group-aligned divisor <= block_k,
+    never fall back to the whole K axis."""
+    assert qm.aligned_block_k(768, 512, 128) == (384, 3, 1)
+    # per-channel large K (group == k > block_k): regime B, the block
+    # subdivides the single group
+    assert qm.aligned_block_k(4096, 512, 4096) == (512, 1, 8)
+    assert qm.aligned_block_k(256, 64, 64) == (64, 1, 1)
+    for k, blk, g in [(768, 512, 128), (4096, 512, 4096), (256, 64, 64),
+                      (384, 512, 96), (224, 96, 56)]:
+        bk, gpb, gdiv = qm.aligned_block_k(k, blk, g)
+        assert bk <= max(blk, g) and k % bk == 0 and bk % qm.PACK == 0
+        assert (gpb == bk // g and gdiv == 1) if g <= bk \
+            else (gpb == 1 and gdiv == g // bk)
+
+
+def test_gemv_odd_k_blocks_vmem_regression():
+    """k=768 with the default block_k=512: the old fallback set bk=k; the
+    fix tiles at 384 and must stay bit-exact vs the replay at that bk."""
+    x, qt, spec = _make(64, 768, 128, 4, m=3, seed=13)
+    got = qm.quant_gemv_pallas(x, qt.qw, qt.scale, qt.zero, spec=spec,
+                               interpret=True)     # default blocks
+    bk, _, _ = qm.aligned_block_k(768, qm.DEFAULT_BLOCK_K, 128)
+    assert bk == 384
+    want = ref.quant_gemv_ref(x, qt.qw, qt.scale, qt.zero, qt.shape, spec)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
