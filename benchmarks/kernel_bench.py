@@ -27,11 +27,19 @@
     and ≥ 1.2× fewer decode steps — all deterministic counters, so a
     noisy runner cannot flake the build.  Wall-clock tokens/s is
     reported unguarded.
+  * Production serving: seeded Poisson / trace-replay traffic through the
+    event-driven admission loop (``repro.serve``), both schedulers, with
+    per-request SLO percentiles (TTFT/TPOT/queue-wait/e2e on the virtual
+    clock — deterministic, trajectory-guarded), a same-seed determinism
+    gate, and an overload arm that must SHED (bounded queue, every
+    request accounted served/rejected/shed, served tokens identical to
+    the unloaded run).
 
-``--emit-json DIR`` writes the structured metrics to
-``DIR/BENCH_kernels.json`` and ``DIR/BENCH_serving.json`` (tokens/s,
-bytes/token, swap and drain statistics) — the CI serve-smoke job uploads
-both as build artifacts.
+``--emit-json DIR`` writes the structured metrics (schema:
+``repro.serve.telemetry``) to ``DIR/BENCH_kernels.json`` and
+``DIR/BENCH_serving.json`` — the CI jobs upload both as build artifacts
+and ``benchmarks/trajectory.py`` diffs the guarded rows against the
+committed baselines.
 """
 from __future__ import annotations
 
@@ -49,31 +57,35 @@ from repro.core.quant import QTensor, QuantSpec
 from repro.core.scale_bank import ScaleBank
 from repro.kernels import ops
 from repro.models import registry
+from repro.serve import telemetry
 
 
 # structured metrics, populated alongside the human report lines and
-# dumped by --emit-json; "serving" metrics land in BENCH_serving.json,
-# everything else in BENCH_kernels.json
-METRICS: list = []
+# dumped by --emit-json in the repro.serve.telemetry schema; "serving"
+# rows land in BENCH_serving.json, everything else in BENCH_kernels.json.
+# Wall-clock rows are marked wall=True (excluded from reproducibility
+# diffs); guard=(direction, band) rows are what trajectory.py gates.
+SINK = telemetry.MetricSink()
+RUN_META: dict = {}      # generating parameters, stamped into the "run" block
 
 
-def metric(name: str, value, unit: str = "", **extra):
-    METRICS.append({"name": name, "value": value, "unit": unit, **extra})
+def metric(name: str, value, unit: str = "", *, wall: bool = False,
+           guard=None, **extra):
+    SINK.log(name, value, unit, wall=wall, guard=guard, **extra)
 
 
 def emit_json(outdir: str):
-    import json
     import os
     os.makedirs(outdir, exist_ok=True)
-    serving_keys = ("sharded", "logitshard", "continuous", "mixed_task")
-    kern = [m for m in METRICS
-            if not any(k in m["name"] for k in serving_keys)]
-    serv = [m for m in METRICS if any(k in m["name"] for k in serving_keys)]
+    serving_keys = ("sharded", "logitshard", "continuous", "mixed_task",
+                    "serving")
+    rows = SINK.metrics
+    kern = [m for m in rows if not any(k in m["name"] for k in serving_keys)]
+    serv = [m for m in rows if any(k in m["name"] for k in serving_keys)]
     for fname, entries in (("BENCH_kernels.json", kern),
                            ("BENCH_serving.json", serv)):
         path = os.path.join(outdir, fname)
-        with open(path, "w") as f:
-            json.dump({"metrics": entries}, f, indent=2, sort_keys=True)
+        SINK.write(path, entries, **RUN_META)
         print(f"[emit-json] wrote {path} ({len(entries)} metrics)")
 
 
@@ -157,6 +169,7 @@ def gemv_roofline(report, check: bool = False) -> bool:
                f"(w3 moves the SAME bytes: nibble-packed) "
                f"single_stream={single}")
         metric(f"kernel/gemv_roofline_{name}", ratio, "x_vs_fp16",
+               guard=("higher", 0.15),
                bytes_per_token_w4=q_total, bytes_per_token_fp16=fp16_b,
                single_stream=bool(single), block_n=bn, block_k=bk)
 
@@ -180,7 +193,8 @@ def gemv_roofline(report, check: bool = False) -> bool:
     else:
         report("kernel/gemv_bitexact", 0.0,
                f"interpret GEMV bit-exact vs oracle at ({m},{n},{k},g{grp})")
-    metric("kernel/gemv_bitexact", int(exact), "bool")
+    metric("kernel/gemv_bitexact", int(exact), "bool",
+           guard=("higher", 0.0))
     return ok
 
 
@@ -235,7 +249,7 @@ def task_switch(report):
            f"scale_swap={t_switch:.0f}us full_reload={t_reload:.0f}us "
            f"payload={bank.nbytes('A')}B of {total}B model "
            f"({100 * bank.nbytes('A') / total:.1f}%)")
-    metric("kernel/task_switch", t_switch, "us",
+    metric("kernel/task_switch", t_switch, "us", wall=True,
            full_reload_us=t_reload, swap_payload_bytes=bank.nbytes("A"),
            model_bytes=total)
 
@@ -326,8 +340,9 @@ def sharded_serving(report, check: bool = False) -> bool:
            f"bytes/device={local_b}B of {total_b}B "
            f"({n // model}x{model} mesh, no swap collectives: "
            f"{coll['total_bytes'] == 0})")
-    metric("kernel/sharded_swap", t_shard, "us", replicated_us=t_repl,
-           bytes_per_device=local_b, total_bytes=total_b,
+    metric("kernel/sharded_swap", t_shard, "us", wall=True,
+           replicated_us=t_repl, bytes_per_device=local_b,
+           total_bytes=total_b,
            swap_collective_bytes=coll["total_bytes"])
 
     # shard-local sampler: logitshard decode must contain NO vocab-extent
@@ -425,9 +440,10 @@ def continuous_serving(report, check: bool = False) -> bool:
     t_lock = time.perf_counter() - t0
 
     # ---- continuous: paged slots, mid-loop admit/evict ------------------
+    from repro.serve import ServeConfig
     eng2 = mk()
-    eng2.serve(reqs, n_slots=n_slots)                   # compile warmup
-    rep = eng2.serve(reqs, n_slots=n_slots)
+    eng2.serve(reqs, ServeConfig(n_slots=n_slots))      # compile warmup
+    rep = eng2.serve(reqs, ServeConfig(n_slots=n_slots))
     if rep.bubble_slot_steps != 0:
         report("kernel/continuous", 0.0,
                f"FAIL {rep.bubble_slot_steps} bubble slot-steps")
@@ -478,10 +494,19 @@ def continuous_serving(report, check: bool = False) -> bool:
            f"bubbles={rep.bubble_slot_steps} vs {lock_bubbles} "
            f"idle={rep.idle_slot_steps} vocab_allgathers={ag}")
     metric("kernel/continuous", tokens_total / rep.wall_s, "tok/s",
+           wall=True,
            lockstep_tok_s=tokens_total / t_lock, steps=rep.steps,
            lockstep_steps=lock_steps, step_ratio=step_ratio,
            bubble_slot_steps=rep.bubble_slot_steps,
            idle_slot_steps=rep.idle_slot_steps)
+    # deterministic step-count win: the trajectory-gated view of the same
+    # speedup (wall tok/s is machine noise; this is not)
+    metric("kernel/continuous_step_ratio", step_ratio, "x_vs_lockstep",
+           guard=("higher", 0.15))
+    # tokens/s win as a SELF-NORMALIZED same-run ratio: machine-independent
+    # enough to gate, wall-marked because both numerators are timings
+    metric("kernel/continuous_tok_ratio", t_lock / rep.wall_s,
+           "x_vs_lockstep", wall=True, guard=("higher", 0.15))
     return ok
 
 
@@ -532,13 +557,15 @@ def mixed_task_serving(report, check: bool = False) -> bool:
         ctx = None
         mk = lambda: Engine(api, jax.tree.map(jnp.asarray, p), bank=bank)
 
+    from repro.serve import ServeConfig
     ok = True
     reports = {}
     for sched in ("drain", "resident"):
+        cfg_s = ServeConfig(n_slots=4, scheduler=sched)
         eng = mk()
-        eng.serve(reqs, n_slots=4, scheduler=sched)       # compile warmup
+        eng.serve(reqs, cfg_s)                            # compile warmup
         eng = mk()
-        reports[sched] = eng.serve(reqs, n_slots=4, scheduler=sched)
+        reports[sched] = eng.serve(reqs, cfg_s)
     rd, rr = reports["drain"], reports["resident"]
 
     for i, (a, b) in enumerate(zip(rd.tokens, rr.tokens)):
@@ -573,6 +600,7 @@ def mixed_task_serving(report, check: bool = False) -> bool:
            f"switches={rr.switches} vs {rd.switches} "
            f"installs={rr.resident_installs}")
     metric("kernel/mixed_task", tokens_total / rr.wall_s, "tok/s",
+           wall=True,
            drain_tok_s=tokens_total / rd.wall_s,
            resident_steps=rr.steps, drain_steps=rd.steps,
            step_ratio=step_ratio,
@@ -580,10 +608,128 @@ def mixed_task_serving(report, check: bool = False) -> bool:
            drain_task_drain_idle=rd.task_drain_idle_slot_steps,
            resident_installs=rr.resident_installs,
            switches_resident=rr.switches, switches_drain=rd.switches)
+    metric("kernel/mixed_task_step_ratio", step_ratio, "x_vs_drain",
+           guard=("higher", 0.15))
     return ok
 
 
-def run(report):
+def production_serving(report, check: bool = False,
+                       traffic_kind: str = "poisson", seed: int = 0) -> bool:
+    """Production traffic through the event-driven admission loop.
+
+    Seeded Poisson (or trace-replay) arrivals over a 3-task bank engine,
+    both schedulers, SLO percentiles on the VIRTUAL clock (TTFT/TPOT/
+    queue-wait/e2e — deterministic for a seeded workload, so the
+    trajectory gate can hold them to a band).  Three gates in check mode:
+
+      * determinism — a second same-seed run must produce the identical
+        stable (non-wall) metric rows;
+      * overload honesty — a bounded queue over an undersized pool must
+        SHED, never stall: every request accounted served/rejected/shed,
+        the queue never exceeds its bound;
+      * scheduling never changes tokens — every request served under
+        overload decodes the exact tokens of the unloaded run.
+    """
+    from repro.serve import ServeConfig, driver, traffic
+    from repro.train.serve import Engine
+
+    cfg = _serving_cfg()
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p, _ = policies.prepare(api.init(rng), cfg, rng)
+    p = jax.tree.map(np.asarray, p)
+
+    bank = ScaleBank()
+    bank.add("t0", p)
+    rngs = np.random.default_rng(7)
+    for t in ("t1", "t2"):
+        bank.tasks[t] = {k: (v * rngs.uniform(0.8, 1.2, v.shape)
+                             ).astype(v.dtype)
+                         for k, v in bank.tasks["t0"].items()}
+    tasks = ("t0", "t1", "t2")
+    mk = lambda: Engine(api, jax.tree.map(jnp.asarray, p), bank=bank)
+
+    reqs, meta = traffic.make(traffic_kind, vocab=cfg.vocab_size, seed=seed,
+                              tasks=tasks, rate=2.0, n_requests=12)
+    RUN_META.update(meta)
+    ok = True
+
+    for sched in ("resident", "drain"):
+        config = ServeConfig(n_slots=4, scheduler=sched)
+        mk().serve(reqs, config)                          # compile warmup
+        rep, summary = driver.run(mk(), reqs, config, sink=SINK)
+        slo = summary["slo"]
+        report(f"kernel/serving_{sched}", rep.wall_s * 1e6,
+               f"{meta['traffic']} seed={seed} served={rep.n_served}/"
+               f"{len(reqs)} steps={rep.steps} "
+               f"ttft_p50={slo['ttft_s']['p50']:.2f} "
+               f"ttft_p99={slo['ttft_s']['p99']:.2f} "
+               f"tpot_p50={slo['tpot_s']['p50']:.2f} "
+               f"tpot_p99={slo['tpot_s']['p99']:.2f} "
+               f"tok/s={summary['tok_s_wall']:.0f}")
+        if rep.n_served != len(reqs):
+            report(f"kernel/serving_{sched}", 0.0,
+                   f"FAIL {len(reqs) - rep.n_served} requests not served "
+                   f"under an unloaded pool")
+            ok = False
+
+    # ---- determinism: same seed, fresh engine -> identical stable rows
+    reqs2, _ = traffic.make(traffic_kind, vocab=cfg.vocab_size, seed=seed,
+                            tasks=tasks, rate=2.0, n_requests=12)
+    sink2 = telemetry.MetricSink()
+    driver.run(mk(), reqs2, ServeConfig(n_slots=4, scheduler="resident"),
+               sink=sink2)
+    first = [m for m in SINK.metrics
+             if m["name"].startswith("serving/resident") and not m.get("wall")]
+    second = [m for m in sink2.metrics if not m.get("wall")]
+    if first != second:
+        diff = [(a, b) for a, b in zip(first, second) if a != b]
+        report("kernel/serving_determinism", 0.0,
+               f"FAIL same-seed rerun diverged: {diff[:3]}")
+        ok = False
+    metric("serving/determinism", int(first == second), "bool",
+           guard=("higher", 0.0))
+    report("kernel/serving_determinism", 0.0,
+           f"same-seed rerun stable rows identical: {first == second}")
+
+    # ---- overload: undersized pool + bounded queue must shed, not stall
+    config_o = ServeConfig(n_slots=2, scheduler="auto", queue_bound=2,
+                           shed_after_s=6.0)
+    rep_o, _ = driver.run(mk(), reqs, config_o, sink=SINK,
+                          label="serving_overload")
+    rep_u = mk().serve(reqs, ServeConfig(n_slots=2, scheduler="auto"))
+    accounted = rep_o.n_served + rep_o.n_rejected + rep_o.n_shed
+    if accounted != len(reqs):
+        report("kernel/serving_overload", 0.0,
+               f"FAIL {len(reqs) - accounted} requests unaccounted")
+        ok = False
+    if rep_o.peak_queue_depth > config_o.queue_bound:
+        report("kernel/serving_overload", 0.0,
+               f"FAIL queue grew to {rep_o.peak_queue_depth} > bound "
+               f"{config_o.queue_bound}")
+        ok = False
+    if check and rep_o.n_served >= len(reqs):
+        report("kernel/serving_overload", 0.0,
+               "FAIL overload arm shed nothing (not an overload?)")
+        ok = False
+    for i, m in enumerate(rep_o.requests):
+        if m.status == "served" and m.tokens != rep_u.requests[i].tokens:
+            report("kernel/serving_overload", 0.0,
+                   f"FAIL req{i} tokens diverge under load")
+            ok = False
+            break
+    metric("serving/overload_accounted", int(accounted == len(reqs)),
+           "bool", guard=("higher", 0.0), n_served=rep_o.n_served,
+           n_rejected=rep_o.n_rejected, n_shed=rep_o.n_shed,
+           peak_queue_depth=rep_o.peak_queue_depth)
+    report("kernel/serving_overload", 0.0,
+           f"served={rep_o.n_served} rejected={rep_o.n_rejected} "
+           f"shed={rep_o.n_shed} peak_queue={rep_o.peak_queue_depth} "
+           f"(bound {config_o.queue_bound}) tokens==unloaded_run")
+    return ok
+
+
+def run(report, traffic_kind: str = "poisson", seed: int = 0):
     traffic_model(report)
     gemv_roofline(report)
     xla_path_walltime(report)
@@ -591,6 +737,7 @@ def run(report):
     sharded_serving(report)
     continuous_serving(report)
     mixed_task_serving(report)
+    production_serving(report, traffic_kind=traffic_kind, seed=seed)
 
 
 if __name__ == "__main__":
@@ -608,6 +755,11 @@ if __name__ == "__main__":
     ap.add_argument("--emit-json", metavar="DIR", default=None,
                     help="write BENCH_kernels.json and BENCH_serving.json "
                          "into DIR (CI artifacts)")
+    ap.add_argument("--traffic", default="poisson",
+                    help="production-serving arrival process "
+                         "(poisson | trace)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="production-serving traffic seed")
     args = ap.parse_args()
 
     def _report(n, us, d):
@@ -618,10 +770,13 @@ if __name__ == "__main__":
         passed = sharded_serving(_report, check=True) and passed
         passed = continuous_serving(_report, check=True) and passed
         passed = mixed_task_serving(_report, check=True) and passed
+        passed = production_serving(_report, check=True,
+                                    traffic_kind=args.traffic,
+                                    seed=args.seed) and passed
         if args.emit_json:
             emit_json(args.emit_json)
         print(f"[check-sharded] {'OK' if passed else 'FAILED'}")
         sys.exit(0 if passed else 1)
-    run(_report)
+    run(_report, traffic_kind=args.traffic, seed=args.seed)
     if args.emit_json:
         emit_json(args.emit_json)

@@ -1,0 +1,177 @@
+"""Perf-trajectory gate: diff a fresh BENCH_*.json run against a baseline.
+
+    python -m benchmarks.trajectory --current bench-out \\
+        --baseline benchmarks/baselines
+
+Exit 0 when every guarded metric in the baseline is present in the current
+run and within its noise band; exit 1 on any regression beyond the band or
+any guarded metric that vanished (a deleted gate is a silent regression).
+
+What is compared (see ``repro.serve.telemetry`` for the schema):
+
+  * only rows carrying ``guard: {direction, band}`` — everything else is
+    context, free to drift;
+  * the band is RELATIVE and one-sided: ``("higher", 0.15)`` fails when
+    ``current < baseline * (1 - 0.15)``; ``("lower", b)`` fails when
+    ``current > baseline * (1 + b)``.  Improvements never fail.
+  * guarded wall-marked rows are allowed — the emitters only guard wall
+    numbers that are self-normalized same-run ratios (machine-independent);
+  * the CURRENT run's guard spec wins when bands differ (so a PR can widen
+    a band deliberately — the diff prints the change).
+
+``--selftest`` fabricates a regression (every guarded baseline value
+worsened by 2 bands) and verifies the gate catches it — CI runs this so a
+broken comparator cannot rot into a green pipeline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+from repro.serve import telemetry
+
+BENCH_FILES = ("BENCH_kernels.json", "BENCH_serving.json")
+
+
+def guarded(doc: Dict) -> Dict[str, Dict]:
+    """name -> metric row, for rows carrying a guard spec."""
+    rows = {}
+    for m in doc["metrics"]:
+        if "guard" in m:
+            rows[m["name"]] = m
+    return rows
+
+
+def check_metric(name: str, base: Dict, cur: Dict,
+                 band_scale: float = 1.0) -> Tuple[bool, str]:
+    """One guarded row: (ok, human line)."""
+    guard = cur.get("guard", base["guard"])
+    direction, band = guard["direction"], guard["band"] * band_scale
+    bv, cv = float(base["value"]), float(cur["value"])
+    if direction == "higher":
+        floor = bv * (1.0 - band)
+        ok = cv >= floor or cv >= bv
+        rel = (cv - bv) / bv if bv else 0.0
+        line = (f"{name}: {cv:g} vs baseline {bv:g} "
+                f"({rel:+.1%}, floor {floor:g})")
+    else:
+        ceil = bv * (1.0 + band)
+        ok = cv <= ceil or cv <= bv
+        rel = (cv - bv) / bv if bv else 0.0
+        line = (f"{name}: {cv:g} vs baseline {bv:g} "
+                f"({rel:+.1%}, ceiling {ceil:g})")
+    return ok, ("OK   " if ok else "FAIL ") + line
+
+
+def compare(current_dir: str, baseline_dir: str,
+            band_scale: float = 1.0) -> Tuple[bool, List[str]]:
+    """Diff every BENCH file; returns (all_ok, report lines)."""
+    lines, all_ok = [], True
+    compared = 0
+    for fname in BENCH_FILES:
+        bpath = os.path.join(baseline_dir, fname)
+        cpath = os.path.join(current_dir, fname)
+        if not os.path.exists(bpath):
+            lines.append(f"SKIP {fname}: no baseline committed")
+            continue
+        if not os.path.exists(cpath):
+            lines.append(f"FAIL {fname}: baseline exists but the current "
+                         f"run produced no file")
+            all_ok = False
+            continue
+        base, cur = guarded(telemetry.load(bpath)), \
+            guarded(telemetry.load(cpath))
+        for name, brow in sorted(base.items()):
+            if name not in cur:
+                lines.append(f"FAIL {name}: guarded in baseline but "
+                             f"missing from the current run")
+                all_ok = False
+                continue
+            ok, line = check_metric(name, brow, cur[name], band_scale)
+            all_ok = all_ok and ok
+            lines.append(line)
+            compared += 1
+        for name in sorted(set(cur) - set(base)):
+            lines.append(f"NEW  {name}: {cur[name]['value']:g} "
+                         f"(no baseline yet)")
+    if compared == 0 and all_ok:
+        lines.append("FAIL no guarded metrics compared (empty gate)")
+        all_ok = False
+    return all_ok, lines
+
+
+def _inject_regression(baseline_dir: str, outdir: str) -> None:
+    """Fabricate a current run that regresses EVERY guarded metric by
+    twice its band (selftest corpus)."""
+    os.makedirs(outdir, exist_ok=True)
+    for fname in BENCH_FILES:
+        path = os.path.join(baseline_dir, fname)
+        if not os.path.exists(path):
+            continue
+        doc = telemetry.load(path)
+        for m in doc["metrics"]:
+            g = m.get("guard")
+            if not g:
+                continue
+            factor = 2.0 * max(g["band"], 0.05)
+            if g["direction"] == "higher":
+                m["value"] = float(m["value"]) * (1.0 - factor)
+            else:
+                m["value"] = float(m["value"]) * (1.0 + factor) + 1e-9
+        with open(os.path.join(outdir, fname), "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+
+
+def selftest(baseline_dir: str) -> int:
+    """The gate must pass baseline-vs-itself and catch a synthetic
+    regression; exit 0 iff both hold."""
+    import tempfile
+
+    ok_same, lines = compare(baseline_dir, baseline_dir)
+    if not ok_same:
+        print("[trajectory --selftest] FAIL: baseline does not pass "
+              "against itself")
+        print("\n".join(lines))
+        return 1
+    with tempfile.TemporaryDirectory() as tmp:
+        _inject_regression(baseline_dir, tmp)
+        ok_reg, lines = compare(tmp, baseline_dir)
+    if ok_reg:
+        print("[trajectory --selftest] FAIL: synthetic regression "
+              "NOT caught")
+        print("\n".join(lines))
+        return 1
+    print("[trajectory --selftest] OK: baseline self-consistent, "
+          "synthetic regression caught")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail CI when guarded BENCH metrics regress beyond "
+                    "their noise band")
+    ap.add_argument("--current", default="bench-out",
+                    help="directory with this run's BENCH_*.json")
+    ap.add_argument("--baseline", default="benchmarks/baselines",
+                    help="directory with the committed baseline BENCH_*.json")
+    ap.add_argument("--band-scale", type=float, default=1.0,
+                    help="multiply every band (loosen a flaky runner "
+                         "without editing emitters)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="verify the comparator itself: baseline passes "
+                         "vs itself AND an injected regression fails")
+    args = ap.parse_args(argv)
+
+    if args.selftest:
+        return selftest(args.baseline)
+    ok, lines = compare(args.current, args.baseline, args.band_scale)
+    print("\n".join(lines))
+    print(f"[trajectory] {'OK' if ok else 'FAILED'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

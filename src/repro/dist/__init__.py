@@ -1,7 +1,11 @@
 """repro.dist — the distribution subsystem.
 
-Four modules, one contract:
+Five modules, one contract:
 
+  * ``backend``      — process-level XLA knobs (platform select, fake host
+                       devices for CI meshes, GPU latency-hiding flags).
+                       Imports jax lazily so launchers can call it before
+                       backend init.
   * ``context``      — the mesh context (axis roles + thread-local scope +
                        activation sharding constraints).  Models call
                        ``constrain_tokens``; it is a no-op outside a mesh
@@ -16,4 +20,5 @@ Four modules, one contract:
                        (the ``logitshard`` serving sampler: scalar
                        max-reduce instead of a vocab all-gather).
 """
+from repro.dist import backend  # noqa: F401  (jax-free: safe pre-init)
 from repro.dist import context, pipeline_par, sampling, sharding  # noqa: F401

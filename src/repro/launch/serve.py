@@ -34,11 +34,10 @@ from __future__ import annotations
 
 import os
 
+from repro.dist import backend
+
 if os.environ.get("REPRO_FAKE_DEVICES"):
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "") +
-        " --xla_force_host_platform_device_count=" +
-        os.environ["REPRO_FAKE_DEVICES"]).strip()
+    backend.fake_host_devices(os.environ["REPRO_FAKE_DEVICES"])
 
 import argparse
 import time
@@ -56,6 +55,7 @@ from repro.dist import context as dctx
 from repro.dist import sharding as shard_rules
 from repro.models import registry
 from repro.optim.adamw import make_optimizer
+from repro.serve import ServeConfig, driver, traffic
 from repro.train import loop, step
 from repro.train.serve import Engine, Request
 
@@ -86,29 +86,43 @@ def mixed_workload(tasks, batch, n_new, n_requests, vocab, stagger=2):
         reqs.append(Request(
             tokens=prompt, n_new=lengths[i % len(lengths)],
             task=tasks[(i // batch) % len(tasks)],
-            arrival=(i // batch) * stagger))
+            arrival_step=(i // batch) * stagger))
     return reqs
 
 
 def run_continuous(engine, cfg, args, tasks):
-    reqs = mixed_workload(tasks, args.batch, args.n_new,
-                          n_requests=3 * args.batch, vocab=cfg.vocab_size)
-    t0 = time.perf_counter()
-    rep = engine.serve(reqs, n_slots=args.batch, scheduler=args.scheduler)
-    wall = time.perf_counter() - t0
+    if args.traffic == "steps":
+        reqs = mixed_workload(tasks, args.batch, args.n_new,
+                              n_requests=3 * args.batch,
+                              vocab=cfg.vocab_size)
+    else:
+        reqs, meta = traffic.make(
+            args.traffic, vocab=cfg.vocab_size, seed=args.seed,
+            tasks=tuple(tasks), rate=args.rate,
+            n_requests=3 * args.batch, trace_path=args.trace or None,
+            n_new=(max(2, args.n_new // 2), args.n_new, 2 * args.n_new))
+        print(f"[serve] traffic: {meta}")
+    config = ServeConfig(n_slots=args.batch, scheduler=args.scheduler)
+    rep, summary = driver.run(engine, reqs, config)
     dropped = [i for i, t in enumerate(rep.tokens) if t is None]
-    for i, (r, out) in enumerate(zip(reqs, rep.tokens)):
+    for i, (r, m) in enumerate(zip(reqs, rep.requests)):
+        out = m.tokens
         got = len(out) if out is not None else 0
         print(f"[serve] req{i:02d} task={r.task} n_new={r.n_new} "
-              f"arrival={r.arrival} got={got} "
+              f"arrival={m.arrival_s:g}s {m.status} got={got} "
+              f"ttft={m.ttft_s:g} "
               f"sample={out[:4] if out else []}")
     print(f"[serve] continuous[{rep.scheduler}]: {rep.decoded} tokens in "
           f"{rep.steps} steps ({args.batch} slots) "
-          f"tok/s={rep.decoded / wall:.0f} "
+          f"tok/s={summary['tok_s_wall']:.0f} "
           f"bubble_slot_steps={rep.bubble_slot_steps} "
           f"idle_slot_steps={rep.idle_slot_steps} "
           f"task_drain_idle_slot_steps={rep.task_drain_idle_slot_steps} "
           f"switches={rep.switches} installs={rep.resident_installs}")
+    slo = summary["slo"]
+    print("[serve] slo: " + " ".join(
+        f"{k}_p50={slo[k]['p50']:g} {k}_p99={slo[k]['p99']:g}"
+        for k in ("ttft_s", "tpot_s", "e2e_s")))
     ok = not dropped and rep.bubble_slot_steps == 0 and all(
         out is not None and len(out) == r.n_new
         for r, out in zip(reqs, rep.tokens))
@@ -142,6 +156,18 @@ def main():
                          "admit/evict); exits 1 on dropped requests or "
                          "bubble steps (and, under the resident "
                          "scheduler, on ANY task-drain idle slot-step)")
+    ap.add_argument("--traffic", default="steps",
+                    choices=("steps",) + traffic.KINDS,
+                    help="--continuous arrival process: 'steps' is the "
+                         "legacy staggered decode-step workload; 'poisson' "
+                         "draws seeded wall-clock arrivals at --rate req/s; "
+                         "'trace' replays --trace (or a canned burst trace)")
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="poisson traffic: requests per virtual second")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="traffic seed (arrivals, prompts, budgets)")
+    ap.add_argument("--trace", default="",
+                    help="trace traffic: JSON trace file to replay")
     ap.add_argument("--scheduler", default="auto",
                     choices=("auto", "resident", "drain"),
                     help="mixed-task policy for --continuous: 'resident' "

@@ -1,0 +1,27 @@
+"""repro.serve — the production serving/driver layer on top of ``Engine``.
+
+Six modules (docs/SERVING.md has the architecture):
+
+  * ``request``   — ``Request`` (dual arrival clocks: wall-clock seconds
+                    for the harness, decode-step index for tests) + trace
+                    (de)serialization.
+  * ``config``    — ``ServeConfig``: pool shape, mixed-task scheduler,
+                    admission control (queue bound, shed deadline) and the
+                    virtual clock.
+  * ``metrics``   — ``RequestMetrics`` (TTFT/TPOT/queue-wait/e2e) and the
+                    per-request ``ServeReport`` with derived aggregates.
+  * ``traffic``   — seeded Poisson and trace-replay arrival processes.
+  * ``telemetry`` — ``MetricSink``, the thin step-metrics sink both
+                    benchmarks and the serve loop feed; stable BENCH_*.json
+                    schema the trajectory gate consumes.
+  * ``driver``    — the harness entry: traffic → ``Engine.serve`` →
+                    SLO summaries → telemetry.
+
+``Engine`` itself stays in ``repro.train.serve`` (it owns the compiled
+decode loop); this package owns everything around it.
+"""
+from repro.serve.config import ServeConfig                       # noqa: F401
+from repro.serve.metrics import (RequestMetrics, ServeReport,    # noqa: F401
+                                 percentiles, slo_summary)
+from repro.serve.request import Request                          # noqa: F401
+from repro.serve import driver, telemetry, traffic               # noqa: F401

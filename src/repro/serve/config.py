@@ -1,0 +1,80 @@
+"""``ServeConfig`` — the one serving-policy surface.
+
+Replaces the positional/keyword sprawl of the old
+``Engine.serve(requests, n_slots, cache_len, *, scheduler, resident_tasks)``
+entry point with a single validated dataclass, and carries the admission-
+control knobs the production harness adds (bounded wait queue, deadline
+shedding) plus the virtual clock that makes SLO metrics deterministic on a
+simulation host (docs/SERVING.md "clocks").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+SCHEDULERS = ("auto", "resident", "drain")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Policy for one ``Engine.serve`` run.
+
+    Pool shape:
+      * ``n_slots`` — paged KV slots decoded per step (one compiled shape).
+      * ``cache_len`` — KV capacity per slot; ``None`` sizes it to the
+        longest request (prompt + budget).
+
+    Mixed-task policy (``scheduler``): ``"drain"`` | ``"resident"`` |
+    ``"auto"`` — semantics in ``Engine.serve``'s docstring.
+
+    Admission control (overload degrades gracefully instead of queueing
+    unboundedly — every outcome is accounted in ``ServeReport``):
+      * ``queue_bound`` — max requests WAITING for a slot.  Arrivals that
+        would leave the wait queue deeper than this are **rejected** at
+        arrival (newest first — FIFO fairness for earlier arrivals).
+        ``None`` = unbounded (the pre-harness behavior).
+      * ``shed_after_s`` — queue-wait deadline: a request still waiting
+        after this many (virtual) seconds is **shed** at its next
+        admission consideration.  ``None`` = never shed.
+
+    Virtual clock (deterministic SLO accounting):
+      * ``step_s`` — virtual seconds one pool decode step costs.
+      * ``prefill_s`` — virtual seconds one admit (prefill) costs;
+        ``None`` = same as ``step_s``.
+    Wall-clock arrivals (``Request.arrival_s``) are compared against this
+    clock; step-clock arrivals (``arrival_step``) gate on pool steps
+    directly, so pre-harness workloads replay bit-identically.
+    """
+    n_slots: int = 4
+    cache_len: Optional[int] = None
+    scheduler: str = "auto"
+    resident_tasks: int = 4
+    queue_bound: Optional[int] = None
+    shed_after_s: Optional[float] = None
+    step_s: float = 1.0
+    prefill_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.n_slots < 1:
+            raise ValueError(f"n_slots={self.n_slots} must be >= 1")
+        if self.cache_len is not None and self.cache_len < 1:
+            raise ValueError(f"cache_len={self.cache_len} must be >= 1")
+        if self.scheduler not in SCHEDULERS:
+            raise ValueError(f"unknown scheduler {self.scheduler!r} "
+                             f"(know: {', '.join(SCHEDULERS)})")
+        if self.resident_tasks < 1:
+            raise ValueError(
+                f"resident_tasks={self.resident_tasks} must be >= 1")
+        if self.queue_bound is not None and self.queue_bound < 0:
+            raise ValueError(f"queue_bound={self.queue_bound} must be >= 0")
+        if self.shed_after_s is not None and self.shed_after_s < 0:
+            raise ValueError(
+                f"shed_after_s={self.shed_after_s} must be >= 0")
+        if self.step_s <= 0:
+            raise ValueError(f"step_s={self.step_s} must be > 0")
+        if self.prefill_s is not None and self.prefill_s < 0:
+            raise ValueError(f"prefill_s={self.prefill_s} must be >= 0")
+
+    @property
+    def admit_cost_s(self) -> float:
+        return self.step_s if self.prefill_s is None else self.prefill_s

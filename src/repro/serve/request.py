@@ -1,0 +1,112 @@
+"""The serving request type.
+
+``Request`` speaks TWO arrival clocks:
+
+  * ``arrival_s`` — wall-clock seconds, the native unit of the production
+    traffic harness (``repro.serve.traffic``): Poisson processes and
+    replayed traces emit timestamps, not decode-step indices.
+  * ``arrival_step`` — the decode-step clock, kept for deterministic tests
+    that want to pin "this request becomes admissible after exactly N pool
+    steps" without reasoning about per-step virtual time.
+
+A request sets at most one of them (``arrival_s`` wins if both are given —
+that is a caller bug and raises).  The legacy ``arrival=`` keyword is a
+deprecated alias of ``arrival_step`` and warns.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import List, Optional, Union
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request for the continuous scheduler."""
+    tokens: np.ndarray                  # (S,) int32 prompt
+    n_new: int                          # generation budget (includes token 0)
+    task: Optional[str] = None          # ScaleBank task the request targets
+    eos_id: Optional[int] = None        # early-stop token
+    arrival_s: Optional[float] = None   # wall-clock seconds (harness native)
+    arrival_step: int = 0               # decode-step index (test clock)
+    # deprecated alias of ``arrival_step`` (pre-ServeConfig API)
+    arrival: dataclasses.InitVar[Optional[int]] = None
+
+    def __post_init__(self, arrival):
+        if arrival is not None:
+            warnings.warn(
+                "Request(arrival=...) is deprecated: use arrival_step= "
+                "(decode-step clock) or arrival_s= (wall-clock seconds)",
+                DeprecationWarning, stacklevel=3)
+            if self.arrival_step:
+                raise ValueError("pass arrival_step=, not both arrival= "
+                                 "and arrival_step=")
+            self.arrival_step = int(arrival)
+        if self.arrival_s is not None and self.arrival_step:
+            raise ValueError(
+                f"request sets both arrival_s={self.arrival_s} and "
+                f"arrival_step={self.arrival_step}; pick one clock")
+        if self.arrival_s is not None and self.arrival_s < 0:
+            raise ValueError(f"arrival_s={self.arrival_s} must be >= 0")
+        if self.arrival_step < 0:
+            raise ValueError(f"arrival_step={self.arrival_step} must be >= 0")
+
+    def arrival_time(self, step_s: float) -> float:
+        """The arrival instant in virtual seconds (step clock scaled)."""
+        if self.arrival_s is not None:
+            return float(self.arrival_s)
+        return self.arrival_step * step_s
+
+    @property
+    def n_prompt(self) -> int:
+        return int(np.asarray(self.tokens).size)
+
+
+TraceRecord = dict
+
+
+def to_trace(requests) -> List[TraceRecord]:
+    """Serialize requests to plain-dict trace records (JSON-ready)."""
+    recs = []
+    for r in requests:
+        recs.append({
+            "arrival_s": r.arrival_time(1.0) if r.arrival_s is None
+            else float(r.arrival_s),
+            "tokens": [int(t) for t in np.asarray(r.tokens).reshape(-1)],
+            "n_new": int(r.n_new),
+            "task": r.task,
+            "eos_id": r.eos_id,
+        })
+    return recs
+
+
+def from_trace(records, *, vocab: Optional[int] = None,
+               seed: int = 0) -> List[Request]:
+    """Rebuild requests from trace records.
+
+    A record carries either explicit ``tokens`` or a ``prompt_len`` — the
+    latter gets a seeded synthetic prompt (needs ``vocab``), so a trace can
+    describe traffic SHAPE without shipping the actual token streams.
+    """
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i, rec in enumerate(records):
+        if "tokens" in rec:
+            toks = np.asarray(rec["tokens"], np.int32)
+        elif "prompt_len" in rec:
+            if vocab is None:
+                raise ValueError(
+                    f"trace record {i} gives prompt_len but no vocab was "
+                    f"passed to synthesize tokens from")
+            toks = rng.integers(0, vocab, size=int(rec["prompt_len"]),
+                                dtype=np.int32)
+        else:
+            raise ValueError(f"trace record {i} has neither tokens nor "
+                             f"prompt_len: {sorted(rec)}")
+        reqs.append(Request(
+            tokens=toks, n_new=int(rec["n_new"]),
+            task=rec.get("task"), eos_id=rec.get("eos_id"),
+            arrival_s=float(rec.get("arrival_s", 0.0))))
+    return reqs

@@ -46,8 +46,9 @@ becomes the serving hot path of the dist subsystem —
 """
 from __future__ import annotations
 
-import dataclasses
+import math
 import time
+import warnings
 from collections import deque
 from typing import List, Optional, Sequence
 
@@ -58,26 +59,20 @@ import numpy as np
 from repro.core.scale_bank import ResidentStack, ScaleBank
 from repro.dist import sampling
 from repro.models.registry import ModelAPI
+# the serving API types live in repro.serve (the production driver layer);
+# re-exported here so pre-harness imports keep working
+from repro.serve.config import ServeConfig
+from repro.serve.metrics import (REJECTED, SERVED, SHED, RequestMetrics,
+                                 ServeReport)
+from repro.serve.request import Request
+
+__all__ = ["Engine", "Request", "RequestMetrics", "ServeConfig",
+           "ServeReport", "SlotPool"]
 
 # families whose decode step accepts a per-slot position vector (the
 # attention KV-cache layout; SSM/recurrent families have no position dim
 # and need no paging — their continuous support is a follow-on)
 _CONTINUOUS_FAMILIES = ("dense", "moe", "vlm")
-
-
-@dataclasses.dataclass
-class Request:
-    """One generation request for the continuous scheduler.
-
-    ``arrival`` is the decode-step index at which the request becomes
-    admissible — the unit the arrival-simulating driver (launch/serve.py
-    --continuous) speaks.
-    """
-    tokens: np.ndarray                 # (S,) int32 prompt
-    n_new: int                         # generation budget (includes token 0)
-    task: Optional[str] = None         # ScaleBank task the request targets
-    eos_id: Optional[int] = None       # early-stop token
-    arrival: int = 0                   # decode step of arrival
 
 
 class SlotPool:
@@ -130,23 +125,6 @@ class SlotPool:
 
     def n_active(self) -> int:
         return int(self.active.sum())
-
-
-@dataclasses.dataclass
-class ServeReport:
-    """What ``Engine.serve`` hands back: per-request tokens + loop stats."""
-    tokens: List[List[int]]            # generated tokens per request
-    steps: int                         # decode steps the pool executed
-    decoded: int                       # useful tokens decoded
-    bubble_slot_steps: int             # 0 by construction (evict-on-finish)
-    idle_slot_steps: int               # arrival gaps / task-drain slack
-    switches: int                      # task switches the scheduler made
-    wall_s: float
-    # idle slot-steps attributable to task incompatibility alone (the cost
-    # the resident scheduler exists to delete; 0 under ``resident``)
-    task_drain_idle_slot_steps: int = 0
-    resident_installs: int = 0         # stack rows (re)installed this serve
-    scheduler: str = "drain"           # which admission policy actually ran
 
 
 class Engine:
@@ -558,10 +536,11 @@ class Engine:
     def _resident_supported(self, requests: Sequence[Request]) -> bool:
         """Can the RESIDENT scheduler run this workload?  Needs a ScaleBank,
         a family with a slotted decode step, and every request tasked (an
-        untasked request has no stack row to read)."""
+        untasked request has no stack row to read; an EMPTY workload is
+        vacuously tasked — the resolved policy must still be reported
+        honestly, see the empty-return in ``serve``)."""
         return (self.bank is not None
                 and self.api.decode_step_slotted is not None
-                and len(requests) > 0
                 and all(r.task is not None for r in requests))
 
     def _ensure_resident(self, resident_tasks: int) -> ResidentStack:
@@ -571,18 +550,68 @@ class Engine:
                                           ctx=self.ctx)
         return self.resident
 
-    def serve(self, requests: Sequence[Request], n_slots: int,
-              cache_len: Optional[int] = None, *,
-              scheduler: str = "auto",
-              resident_tasks: int = 4) -> ServeReport:
-        """Continuously-batched serving of a request list.
+    def _serve_config(self, config, n_slots, cache_len, scheduler,
+                      resident_tasks) -> ServeConfig:
+        """Resolve the ``serve`` entry point's arguments to a ServeConfig.
 
-        Scheduler semantics (docs/DIST.md "Serving"):
-          * admission is arrival-ordered FIFO into free slots, gated on
-            ``request.arrival`` (decode-step clock);
+        New API: ``serve(requests, ServeConfig(...))``.  The pre-harness
+        keyword sprawl (``n_slots=``, ``cache_len=``, ``scheduler=``,
+        ``resident_tasks=``, or n_slots passed positionally) still works
+        for one release behind a DeprecationWarning.
+        """
+        legacy = {k: v for k, v in (("n_slots", n_slots),
+                                    ("cache_len", cache_len),
+                                    ("scheduler", scheduler),
+                                    ("resident_tasks", resident_tasks))
+                  if v is not None}
+        if isinstance(config, ServeConfig):
+            if legacy:
+                raise TypeError(
+                    f"serve got a ServeConfig AND legacy keyword(s) "
+                    f"{sorted(legacy)}; put every knob in the config")
+            return config
+        if config is not None:          # old positional n_slots
+            if "n_slots" in legacy:
+                raise TypeError("serve got n_slots twice (positionally "
+                                "and by keyword)")
+            legacy["n_slots"] = config
+        if "n_slots" not in legacy:
+            raise TypeError("serve needs a ServeConfig (or the deprecated "
+                            "n_slots= keyword)")
+        warnings.warn(
+            "Engine.serve(requests, n_slots=..., cache_len=..., "
+            "scheduler=..., resident_tasks=...) is deprecated: pass "
+            "repro.serve.ServeConfig as the second argument",
+            DeprecationWarning, stacklevel=3)
+        legacy.setdefault("scheduler", "auto")
+        legacy.setdefault("resident_tasks", 4)
+        return ServeConfig(**legacy)
+
+    def serve(self, requests: Sequence[Request], config=None,
+              n_slots: Optional[int] = None,
+              cache_len: Optional[int] = None, *,
+              scheduler: Optional[str] = None,
+              resident_tasks: Optional[int] = None) -> ServeReport:
+        """Continuously-batched serving of a request stream.
+
+        ``config`` is a ``repro.serve.ServeConfig`` (pool shape, scheduler,
+        admission control, virtual clock); the remaining parameters are the
+        deprecated pre-harness spelling (see ``_serve_config``).
+
+        The loop is EVENT-DRIVEN: requests enter a bounded wait queue when
+        the clock reaches their arrival (``arrival_s`` against the virtual
+        clock — ``step_s`` per decode step, ``admit_cost_s`` per prefill —
+        or ``arrival_step`` against the pool step counter), are admitted
+        FIFO into free slots, and leave as exactly one of **served** /
+        **rejected** (arrival would overflow ``queue_bound``; newest first)
+        / **shed** (queue-wait exceeded ``shed_after_s`` by admission
+        time).  Each gets a ``RequestMetrics`` row — TTFT, TPOT,
+        queue-wait, e2e on the virtual clock — in ``report.requests``.
+
+        Scheduler semantics (docs/DIST.md "Serving", docs/SERVING.md):
           * eviction is immediate on EOS or budget, so a finished sequence
             never occupies a decode step (zero bubble slot-steps);
-          * mixed-task traffic, ``scheduler`` =
+          * mixed-task traffic, ``config.scheduler`` =
 
             - ``"drain"`` — a request for a different task than the engine
               currently serves waits until the pool DRAINS, then the scales
@@ -605,48 +634,91 @@ class Engine:
               ``drain`` otherwise.
 
         Requesting ``"resident"`` on an unsupported workload raises;
-        ``report.scheduler`` records which policy actually ran.
+        ``report.scheduler`` records which policy actually ran — including
+        on the empty-workload early return (a hardcoded default here once
+        mislabeled validated ``"resident"`` runs as ``"drain"``).
         """
-        if scheduler not in ("auto", "resident", "drain"):
-            raise ValueError(f"unknown scheduler {scheduler!r} "
-                             f"(know: auto, resident, drain)")
-        use_resident = (scheduler != "drain"
+        cfg = self._serve_config(config, n_slots, cache_len, scheduler,
+                                 resident_tasks)
+        requests = list(requests)
+        use_resident = (cfg.scheduler != "drain"
                         and self._resident_supported(requests))
-        if scheduler == "resident" and not use_resident:
+        if cfg.scheduler == "resident" and not use_resident:
             missing = ("no ScaleBank attached" if self.bank is None
                        else "family has no slotted decode step"
                        if self.api.decode_step_slotted is None
                        else "not every request names a task")
             raise ValueError(f"scheduler='resident' unsupported here: "
                              f"{missing}")
+        sched_name = "resident" if use_resident else "drain"
+        step_s, admit_cost = cfg.step_s, cfg.admit_cost_s
+        metrics = [RequestMetrics(rid=i, task=r.task,
+                                  arrival_s=r.arrival_time(step_s),
+                                  n_prompt=r.n_prompt,
+                                  n_budget=int(r.n_new))
+                   for i, r in enumerate(requests)]
         if not requests:
-            return ServeReport(tokens=[], steps=0, decoded=0,
-                               bubble_slot_steps=0, idle_slot_steps=0,
-                               switches=0, wall_s=0.0)
-        if cache_len is None:
-            cache_len = max(int(np.asarray(r.tokens).size) + int(r.n_new)
-                            for r in requests)
+            return ServeReport(requests=[], scheduler=sched_name,
+                               config=cfg)
+        eff_cache_len = cfg.cache_len
+        if eff_cache_len is None:
+            eff_cache_len = max(r.n_prompt + int(r.n_new) for r in requests)
         if use_resident:
             self._slotted_decode_fn()           # raise early if unsupported
-            resident = self._ensure_resident(resident_tasks)
+            resident = self._ensure_resident(cfg.resident_tasks)
             installs0 = resident.installs
-        order = sorted(range(len(requests)),
-                       key=lambda i: (requests[i].arrival, i))
-        queue = deque(order)
-        pool = self.open_pool(n_slots, cache_len)
+        # event-driven arrival feed: requests sit in ``arrivals`` until the
+        # clock reaches them, then move through the bounded wait queue —
+        # nothing is pre-admitted from a sorted list
+        arrivals = deque(sorted(range(len(requests)),
+                                key=lambda i: (metrics[i].arrival_s, i)))
+        waitq: deque = deque()
+        pool = self.open_pool(cfg.n_slots, eff_cache_len)
         pool.slotted = use_resident
-        results: List[Optional[List[int]]] = [None] * len(requests)
         switches = 0
+        peak_queue = 0
+        now = 0.0                       # virtual seconds
+        eps = 1e-9
         t0 = time.perf_counter()
-        while queue or pool.n_active():
+
+        def due(rid: int) -> bool:
+            r = requests[rid]
+            if r.arrival_s is not None:
+                return metrics[rid].arrival_s <= now + eps
+            return r.arrival_step <= pool.steps
+
+        def steps_until_due() -> int:
+            """Idle decode steps to jump so the earliest arrival is due."""
+            rid = arrivals[0]
+            r = requests[rid]
+            if r.arrival_s is not None:
+                return max(1, math.ceil(
+                    (metrics[rid].arrival_s - now - eps) / step_s))
+            return max(1, r.arrival_step - pool.steps)
+
+        def finish(rid: int, toks: List[int]) -> None:
+            m = metrics[rid]
+            m.tokens = [int(t) for t in toks]
+            m.status = SERVED
+            m.finish_s = now
+
+        while arrivals or waitq or pool.n_active():
+            # 1. arrivals whose time has come enter the wait queue
+            while arrivals and due(arrivals[0]):
+                waitq.append(arrivals.popleft())
+            # 2. FIFO admission, shedding stale requests at consideration
             blocked_by_task = False
-            while queue:
-                rid = queue[0]
-                req = requests[rid]
-                if req.arrival > pool.steps:
-                    break
+            while waitq:
+                rid = waitq[0]
+                m = metrics[rid]
+                if (cfg.shed_after_s is not None
+                        and now - m.arrival_s > cfg.shed_after_s + eps):
+                    waitq.popleft()
+                    m.status = SHED
+                    continue
                 if pool.free_slot() is None:
                     break
+                req = requests[rid]
                 if use_resident:
                     pinned = {pool.task[s]
                               for s in np.flatnonzero(pool.active)}
@@ -660,8 +732,11 @@ class Engine:
                         # stack and never see the swap — no drain
                         self.switch_task(req.task)
                         switches += 1
-                    queue.popleft()
+                    waitq.popleft()
+                    m.admit_s = now
+                    now += admit_cost
                     slot = self.admit(pool, req, rid=rid)
+                    m.first_token_s = now
                     pool.tid[slot] = row
                     pool._dev = None
                 else:
@@ -672,35 +747,56 @@ class Engine:
                             break           # drain, then swap scales once
                         self.switch_task(req.task)
                         switches += 1
-                    queue.popleft()
+                    waitq.popleft()
+                    m.admit_s = now
+                    now += admit_cost
                     slot = self.admit(pool, req, rid=rid)
+                    m.first_token_s = now
                 if self._slot_done(pool, slot):
-                    results[rid] = self.evict(pool, slot)
+                    finish(rid, self.evict(pool, slot))
+            # 3. backpressure: arrivals past the queue bound are REJECTED,
+            #    newest first, so overload degrades instead of queueing
+            #    unboundedly (every outcome stays accounted)
+            if cfg.queue_bound is not None:
+                while len(waitq) > cfg.queue_bound:
+                    metrics[waitq.pop()].status = REJECTED
+            peak_queue = max(peak_queue, len(waitq))
+            # 4. advance: decode if anything is live, else jump the clock
+            #    to the next arrival
             if pool.n_active() == 0:
-                if queue:                   # waiting on a future arrival
-                    pool.steps += 1
-                    pool.idle_slot_steps += pool.n_slots
-                    continue
-                break
+                if not arrivals:
+                    if waitq:
+                        # unreachable by construction: with an idle pool the
+                        # admission loop admits (task blocks need in-flight
+                        # slots) — fail loudly rather than spin forever
+                        raise RuntimeError(
+                            f"serve: wait queue stuck with an idle pool "
+                            f"({len(waitq)} waiting)")
+                    break
+                k = steps_until_due()
+                pool.steps += k
+                pool.idle_slot_steps += k * pool.n_slots
+                now += k * step_s
+                continue
             n_act = pool.n_active()
             self.step(pool)
+            now += step_s
             if blocked_by_task:
                 # the free slots this step could have hosted the blocked
                 # request — the drain tax the resident scheduler deletes
                 pool.task_drain_idle_slot_steps += pool.n_slots - n_act
             for slot in np.flatnonzero(pool.active):
                 if self._slot_done(pool, slot):
-                    rid = pool.meta[slot]["rid"]
-                    results[rid] = self.evict(pool, slot)
+                    finish(pool.meta[slot]["rid"], self.evict(pool, slot))
         return ServeReport(
-            tokens=results, steps=pool.steps, decoded=pool.decoded,
+            requests=metrics, steps=pool.steps, decoded=pool.decoded,
             bubble_slot_steps=pool.bubble_slot_steps,
             idle_slot_steps=pool.idle_slot_steps,
             switches=switches, wall_s=time.perf_counter() - t0,
             task_drain_idle_slot_steps=pool.task_drain_idle_slot_steps,
             resident_installs=(resident.installs - installs0
                                if use_resident else 0),
-            scheduler="resident" if use_resident else "drain")
+            scheduler=sched_name, peak_queue_depth=peak_queue, config=cfg)
 
     # ------------------------------------------------------------ introspect
     def _decode_hlo(self, b: int, cache_len: int, pos_aval) -> str:

@@ -27,6 +27,7 @@ from repro.configs.base import QuantConfig, TuningConfig
 from repro.core import policies
 from repro.dist import sampling
 from repro.models import registry
+from repro.serve import ServeConfig
 from repro.train.serve import Engine, Request
 
 
@@ -58,8 +59,8 @@ def test_continuous_matches_lockstep_token_for_token(engine):
     shapes = [(6, 4, 0), (5, 9, 0), (7, 3, 1), (6, 6, 2), (4, 12, 3),
               (8, 2, 5), (6, 5, 9)]
     reqs = [Request(tokens=rs.integers(0, 128, size=s).astype(np.int32),
-                    n_new=n, arrival=a) for s, n, a in shapes]
-    rep = engine.serve(reqs, n_slots=2)          # 7 requests through 2 slots
+                    n_new=n, arrival_step=a) for s, n, a in shapes]
+    rep = engine.serve(reqs, ServeConfig(n_slots=2))  # 7 reqs through 2 slots
     assert rep.bubble_slot_steps == 0
     assert rep.decoded == sum(n for _, n, _ in shapes)
     # mid-loop admission actually happened: the pool is smaller than the
@@ -73,7 +74,7 @@ def test_continuous_int8_kv_cache():
     eng = _make_engine(kv_cache_dtype="int8")
     reqs = [Request(tokens=np.arange(5, dtype=np.int32) * (i + 2) % 128,
                     n_new=4 + 3 * i) for i in range(3)]
-    rep = eng.serve(reqs, n_slots=2)
+    rep = eng.serve(reqs, ServeConfig(n_slots=2))
     for i, req in enumerate(reqs):
         assert rep.tokens[i] == _lockstep_ref(eng, req), f"req {i}"
 
@@ -87,11 +88,11 @@ def test_eos_eviction_mid_loop(engine):
     if j is None:
         pytest.skip("reference stream has no unique mid-stream token")
     rep = engine.serve([Request(tokens=req.tokens, n_new=10,
-                                eos_id=int(ref[j]))], n_slots=2)
+                                eos_id=int(ref[j]))], ServeConfig(n_slots=2))
     assert rep.tokens[0] == ref[:j + 1]
     # EOS on the PREFILL token: finishes at admit, zero decode steps
     rep0 = engine.serve([Request(tokens=req.tokens, n_new=10,
-                                 eos_id=int(ref[0]))], n_slots=2)
+                                 eos_id=int(ref[0]))], ServeConfig(n_slots=2))
     assert rep0.tokens[0] == ref[:1] and rep0.steps == 0
 
 
@@ -155,7 +156,7 @@ def test_sliding_window_continuous_matches_lockstep():
     eng = Engine(api, jax.tree.map(jnp.array, p))
     reqs = [Request(tokens=np.arange(4, dtype=np.int32) * (i + 1) % 128,
                     n_new=3 + 2 * i) for i in range(3)]
-    rep = eng.serve(reqs, n_slots=2)
+    rep = eng.serve(reqs, ServeConfig(n_slots=2))
     for i, req in enumerate(reqs):
         assert rep.tokens[i] == _lockstep_ref(eng, req), f"req {i}"
 

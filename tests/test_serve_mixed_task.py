@@ -23,6 +23,7 @@ from repro.core import policies
 from repro.core import scale_bank as sb
 from repro.dist import sharding as shard_rules
 from repro.models import registry
+from repro.serve import ServeConfig
 from repro.train.serve import Engine, Request
 
 TASKS = ("t0", "t1", "t2")
@@ -62,12 +63,14 @@ def _requests(cfg, n=9):
 @pytest.fixture(scope="module")
 def drain_report(setup):
     cfg = setup[0]
-    return _engine(setup).serve(_requests(cfg), n_slots=3, scheduler="drain")
+    return _engine(setup).serve(
+        _requests(cfg), ServeConfig(n_slots=3, scheduler="drain"))
 
 
 def test_resident_token_equal_and_drain_free(setup, drain_report):
     cfg = setup[0]
-    rep = _engine(setup).serve(_requests(cfg), n_slots=3, scheduler="auto")
+    rep = _engine(setup).serve(_requests(cfg),
+                               ServeConfig(n_slots=3, scheduler="auto"))
     assert rep.scheduler == "resident"
     assert drain_report.scheduler == "drain"
     assert rep.tokens == drain_report.tokens          # token-for-token
@@ -84,12 +87,14 @@ def test_lru_small_stack_still_exact(setup, drain_report):
     stalls on pinned rows are metered, tokens stay EXACT — and more slots
     than resident rows (4 > 2) cannot deadlock the admission loop."""
     cfg = setup[0]
-    rep = _engine(setup).serve(_requests(cfg), n_slots=3,
-                               scheduler="resident", resident_tasks=2)
+    rep = _engine(setup).serve(
+        _requests(cfg),
+        ServeConfig(n_slots=3, scheduler="resident", resident_tasks=2))
     assert rep.tokens == drain_report.tokens
     assert rep.resident_installs > len(TASKS)         # LRU churn
-    rep4 = _engine(setup).serve(_requests(cfg), n_slots=4,
-                                scheduler="resident", resident_tasks=2)
+    rep4 = _engine(setup).serve(
+        _requests(cfg),
+        ServeConfig(n_slots=4, scheduler="resident", resident_tasks=2))
     assert rep4.tokens == drain_report.tokens
     assert all(t is not None for t in rep4.tokens)
 
@@ -98,7 +103,7 @@ def test_auto_falls_back_to_drain_when_untasked(setup, drain_report):
     cfg = setup[0]
     reqs = _requests(cfg, n=3)
     reqs[1] = Request(tokens=reqs[1].tokens, n_new=reqs[1].n_new)  # no task
-    rep = _engine(setup).serve(reqs, n_slots=3, scheduler="auto")
+    rep = _engine(setup).serve(reqs, ServeConfig(n_slots=3, scheduler="auto"))
     assert rep.scheduler == "drain"
 
 
@@ -106,13 +111,14 @@ def test_explicit_resident_raises_when_unsupported(setup):
     cfg, api, p, bank = setup
     reqs = [Request(tokens=np.arange(4, dtype=np.int32), n_new=4)]
     with pytest.raises(ValueError, match="names a task"):
-        _engine(setup).serve(reqs, n_slots=2, scheduler="resident")
+        _engine(setup).serve(reqs,
+                             ServeConfig(n_slots=2, scheduler="resident"))
     nobank = Engine(api, jax.tree.map(jnp.asarray, p))
     with pytest.raises(ValueError, match="ScaleBank"):
-        nobank.serve(_requests(cfg, n=3), n_slots=2, scheduler="resident")
+        nobank.serve(_requests(cfg, n=3),
+                     ServeConfig(n_slots=2, scheduler="resident"))
     with pytest.raises(ValueError, match="unknown scheduler"):
-        _engine(setup).serve(_requests(cfg, n=3), n_slots=2,
-                             scheduler="residnet")
+        ServeConfig(n_slots=2, scheduler="residnet")
 
 
 def test_resident_stack_row_content(setup):

@@ -160,6 +160,7 @@ _CONT_TEST = textwrap.dedent("""
     from repro.launch import hlo_stats
     from repro.launch.serve import place_prompt
     from repro.models import registry
+    from repro.serve import ServeConfig
     from repro.train.serve import Engine, Request
 
     mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -191,12 +192,12 @@ _CONT_TEST = textwrap.dedent("""
     # ---- continuous mesh serving == host serving == lockstep -----------
     reqs = [Request(tokens=(np.arange(6, dtype=np.int32) * (i + 1)) % 512,
                     n_new=[4, 7, 3, 9][i % 4],
-                    task=["A", "B"][(i // 4) % 2], arrival=i // 2)
+                    task=["A", "B"][(i // 4) % 2], arrival_step=i // 2)
             for i in range(8)]
     host.switch_task("A"); emesh.switch_task("A")
-    rep_h = host.serve(reqs, n_slots=4)
+    rep_h = host.serve(reqs, ServeConfig(n_slots=4))
     host.switch_task("A"); emesh.switch_task("A")
-    rep_m = emesh.serve(reqs, n_slots=4)
+    rep_m = emesh.serve(reqs, ServeConfig(n_slots=4))
     assert rep_m.bubble_slot_steps == 0
     assert rep_m.switches == rep_h.switches == 1      # drain, swap once
     for i in range(len(reqs)):

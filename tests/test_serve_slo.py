@@ -1,0 +1,214 @@
+"""Per-request SLO accounting, admission control, and API-redesign shims.
+
+Everything here runs on the VIRTUAL clock (``ServeConfig.step_s`` /
+``prefill_s``), so the SLO numbers are exact integers a human can verify
+by stepping the schedule on paper — the hand-trace test below does
+exactly that.  The overload tests pin the admission-control contract:
+a bounded queue sheds instead of stalling, every request ends served,
+rejected or shed, and scheduling pressure never changes the tokens a
+served request decodes.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import QuantConfig, TuningConfig
+from repro.core import policies
+from repro.core import scale_bank as sb
+from repro.models import registry
+from repro.serve import ServeConfig, percentiles
+from repro.serve.metrics import RequestMetrics
+from repro.train.serve import Engine, Request
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.paper_lm(n_layers=2, d_model=64, n_heads=2, d_ff=96,
+                           vocab=128).replace(
+        tuning=TuningConfig(mode="peqa"),
+        quant=QuantConfig(bits=4, n_grid=2))
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p, _ = policies.prepare(api.init(rng), cfg, rng)
+    p = jax.tree.map(np.asarray, p)
+    bank = sb.ScaleBank()
+    bank.add("t0", p)
+    return cfg, api, p, bank
+
+
+def _engine(setup, with_bank=False):
+    cfg, api, p, bank = setup
+    return Engine(api, jax.tree.map(jnp.asarray, p),
+                  bank=bank if with_bank else None)
+
+
+def _req(n_prompt=4, n_new=3, arrival_s=0.0, i=1):
+    return Request(tokens=(np.arange(n_prompt, dtype=np.int32) * i) % 128,
+                   n_new=n_new, arrival_s=arrival_s)
+
+
+# --------------------------------------------------------------- SLO math
+
+def test_slo_hand_trace(setup):
+    """1 slot, step_s=1, prefill_s=1, both requests arrive at t=0.
+
+    On paper: r0 admits at 0 (prefill 0→1, first token at 1), decodes its
+    remaining 2 tokens at 2 and 3; r1 queues 3s, admits at 3, first token
+    at 4, last at 5.  Every SLO number below reads off that schedule.
+    """
+    eng = _engine(setup)
+    reqs = [_req(n_new=3, i=1), _req(n_new=2, i=2)]
+    rep = eng.serve(reqs, ServeConfig(n_slots=1, step_s=1.0, prefill_s=1.0))
+
+    r0, r1 = rep.requests
+    assert (r0.status, r1.status) == ("served", "served")
+    assert (r0.queue_wait_s, r0.ttft_s, r0.e2e_s, r0.tpot_s) == (0, 1, 3, 1)
+    assert (r1.queue_wait_s, r1.ttft_s, r1.e2e_s, r1.tpot_s) == (3, 4, 5, 1)
+    assert r0.n_generated == 3 and r1.n_generated == 2
+
+    slo = rep.slo()
+    assert slo["ttft_s"]["p50"] == pytest.approx(2.5)   # median of {1, 4}
+    assert slo["e2e_s"]["p99"] == pytest.approx(np.percentile([3, 5], 99))
+
+
+def test_single_token_request_tpot_zero(setup):
+    """n_new=1 finishes at admit: one token, no decode interval — TPOT is
+    0, not a division by zero."""
+    eng = _engine(setup)
+    rep = eng.serve([_req(n_new=1)], ServeConfig(n_slots=1, prefill_s=1.0))
+    m = rep.requests[0]
+    assert m.status == "served" and m.n_generated == 1
+    assert m.tpot_s == 0.0 and m.e2e_s == m.ttft_s == 1.0
+
+
+def test_percentiles_match_numpy():
+    vals = [3.0, 1.0, 4.0, 1.5, 9.0]
+    got = percentiles(vals)
+    for q, key in ((50, "p50"), (90, "p90"), (99, "p99")):
+        assert got[key] == pytest.approx(np.percentile(vals, q))
+
+
+def test_metrics_before_admission_are_none():
+    m = RequestMetrics(rid=0, task=None, arrival_s=1.0)
+    assert m.ttft_s is None and m.queue_wait_s is None
+    assert m.e2e_s is None and m.tpot_s is None
+    assert m.n_generated == 0
+
+
+# ------------------------------------------------------ admission control
+
+def test_overload_bounded_queue_accounts_everyone(setup):
+    eng = _engine(setup)
+    reqs = [_req(arrival_s=0.0, i=i + 1) for i in range(8)]
+    cfg_o = ServeConfig(n_slots=2, queue_bound=2)
+    rep = eng.serve(reqs, cfg_o)
+    assert rep.n_served + rep.n_rejected + rep.n_shed == len(reqs)
+    assert rep.n_rejected > 0                 # 8 at once into 2+2 capacity
+    assert rep.peak_queue_depth <= cfg_o.queue_bound
+    assert all(m.status in ("served", "rejected", "shed")
+               for m in rep.requests)
+    # rejection happens newest-first: the earliest arrivals are served
+    assert rep.requests[0].status == "served"
+    # served tokens == the unloaded run's, request for request
+    rep_u = eng.serve(reqs, ServeConfig(n_slots=2))
+    assert rep_u.n_served == len(reqs)
+    for mo, mu in zip(rep.requests, rep_u.requests):
+        if mo.status == "served":
+            assert mo.tokens == mu.tokens
+    # rejected/shed requests expose no token stream
+    assert all(t is None for m, t in zip(rep.requests, rep.tokens)
+               if m.status != "served")
+
+
+def test_deadline_shed(setup):
+    """A queue-wait deadline sheds the blocked request instead of serving
+    it arbitrarily late."""
+    eng = _engine(setup)
+    reqs = [_req(n_new=10, arrival_s=0.0, i=1),
+            _req(n_new=2, arrival_s=0.0, i=2)]
+    rep = eng.serve(reqs, ServeConfig(n_slots=1, shed_after_s=2.0,
+                                      step_s=1.0, prefill_s=1.0))
+    assert rep.requests[0].status == "served"
+    assert rep.requests[1].status == "shed"
+    assert rep.n_shed == 1
+    # without the deadline the same request is served late
+    rep2 = eng.serve(reqs, ServeConfig(n_slots=1, step_s=1.0, prefill_s=1.0))
+    assert rep2.requests[1].status == "served"
+    assert rep2.requests[1].queue_wait_s == 10.0
+
+
+def test_wall_clock_arrivals_gate_admission(setup):
+    """arrival_s is honored on the virtual clock: a request arriving at
+    t=5 with step_s=1 cannot see a first token before 5."""
+    eng = _engine(setup)
+    rep = eng.serve([_req(arrival_s=5.0)],
+                    ServeConfig(n_slots=1, step_s=1.0, prefill_s=1.0))
+    m = rep.requests[0]
+    assert m.admit_s == pytest.approx(5.0)
+    assert m.queue_wait_s == pytest.approx(0.0)
+    assert m.first_token_s == pytest.approx(6.0)
+
+
+# ------------------------------------------------- API redesign + shims
+
+def test_empty_requests_reports_requested_scheduler(setup):
+    """Regression: the empty-workload early return used to hardcode
+    scheduler="drain" even when "resident" was requested and validated."""
+    eng = _engine(setup, with_bank=True)
+    rep = eng.serve([], ServeConfig(n_slots=2, scheduler="resident"))
+    assert rep.scheduler == "resident"
+    assert rep.requests == [] and rep.steps == 0
+    rep_d = eng.serve([], ServeConfig(n_slots=2, scheduler="drain"))
+    assert rep_d.scheduler == "drain"
+    # auto still resolves (vacuously tasked empty workload + bank present)
+    rep_a = eng.serve([], ServeConfig(n_slots=2, scheduler="auto"))
+    assert rep_a.scheduler == "resident"
+
+
+def test_legacy_serve_kwargs_warn_and_match(setup):
+    eng = _engine(setup)
+    reqs = [_req(i=1), _req(i=2)]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # new API is warning-free
+        rep_new = eng.serve(reqs, ServeConfig(n_slots=2))
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        rep_old = eng.serve(reqs, n_slots=2)
+    assert rep_old.tokens == rep_new.tokens
+    assert rep_old.steps == rep_new.steps
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        rep_pos = eng.serve(reqs, 2)          # positional legacy n_slots
+    assert rep_pos.tokens == rep_new.tokens
+
+
+def test_serve_config_and_legacy_kwargs_conflict(setup):
+    eng = _engine(setup)
+    with pytest.raises(TypeError, match="AND legacy keyword"):
+        eng.serve([_req()], ServeConfig(n_slots=2), n_slots=2)
+    with pytest.raises(TypeError, match="ServeConfig"):
+        eng.serve([_req()])                   # neither config nor n_slots
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        ServeConfig(scheduler="nope")
+    with pytest.raises(ValueError, match="n_slots"):
+        ServeConfig(n_slots=0)
+    with pytest.raises(ValueError, match="step_s"):
+        ServeConfig(step_s=0.0)
+    with pytest.raises(ValueError, match="queue_bound"):
+        ServeConfig(queue_bound=-1)
+    with pytest.raises(ValueError, match="shed_after_s"):
+        ServeConfig(shed_after_s=-0.5)
+    assert ServeConfig(prefill_s=None).admit_cost_s == ServeConfig().step_s
+
+
+def test_report_aggregates_are_derived(setup):
+    eng = _engine(setup)
+    rep = eng.serve([_req(i=1), _req(i=2)], ServeConfig(n_slots=2))
+    assert rep.n_served == 2 and rep.n_rejected == rep.n_shed == 0
+    assert rep.tokens == [m.tokens for m in rep.requests]
+    assert rep.config.n_slots == 2

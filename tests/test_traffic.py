@@ -1,0 +1,123 @@
+"""Traffic generation determinism + trace round-trips (repro.serve.traffic).
+
+The harness's reproducibility contract starts here: the request stream
+must be a pure function of its arguments — same seed, same arrivals,
+prompts, tasks and budgets, byte for byte.  CI regenerates traffic in a
+different process than the baseline run, so nothing may depend on
+process state (hash seeds, global RNGs, wall clocks).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.serve import traffic
+from repro.serve.request import Request, from_trace, to_trace
+
+
+def _stream_fingerprint(reqs):
+    return [(round(r.arrival_s, 12), r.task, r.n_new, r.tokens.tolist())
+            for r in reqs]
+
+
+def test_poisson_same_seed_identical():
+    kw = dict(rate=3.0, n_requests=20, vocab=128, tasks=("a", "b", None),
+              prompt_lens=(4, 8), n_new=(4, 8, 12))
+    a = traffic.poisson_traffic(seed=7, **kw)
+    b = traffic.poisson_traffic(seed=7, **kw)
+    assert _stream_fingerprint(a) == _stream_fingerprint(b)
+    # arrivals strictly increase (exponential gaps are positive)
+    ts = [r.arrival_s for r in a]
+    assert all(t1 > t0 for t0, t1 in zip(ts, ts[1:]))
+    assert all(r.n_new in (4, 8, 12) and r.n_prompt in (4, 8) for r in a)
+
+
+def test_poisson_seed_changes_stream():
+    kw = dict(rate=3.0, n_requests=20, vocab=128)
+    a = traffic.poisson_traffic(seed=0, **kw)
+    b = traffic.poisson_traffic(seed=1, **kw)
+    assert _stream_fingerprint(a) != _stream_fingerprint(b)
+
+
+def test_poisson_rate_validation():
+    with pytest.raises(ValueError, match="rate"):
+        traffic.poisson_traffic(rate=0.0, n_requests=3, vocab=16)
+    with pytest.raises(ValueError, match="n_requests"):
+        traffic.poisson_traffic(rate=1.0, n_requests=0, vocab=16)
+
+
+def test_trace_round_trip(tmp_path):
+    reqs = traffic.poisson_traffic(rate=2.0, n_requests=8, vocab=64,
+                                   seed=3, tasks=("t0", "t1"), eos_id=5)
+    path = str(tmp_path / "trace.json")
+    traffic.save_trace(path, reqs)
+    back = traffic.load_trace(path)
+    assert _stream_fingerprint(back) == _stream_fingerprint(reqs)
+    assert all(r.eos_id == 5 for r in back)
+
+
+def test_trace_prompt_len_synthesis_seeded(tmp_path):
+    """Records may carry just ``prompt_len``: prompts are synthesized from
+    the replay seed — deterministically."""
+    records = [{"prompt_len": 6, "n_new": 4, "arrival_s": 0.5, "task": "a"},
+               {"prompt_len": 3, "n_new": 2, "arrival_s": 1.0}]
+    a = from_trace(records, vocab=32, seed=9)
+    b = from_trace(records, vocab=32, seed=9)
+    c = from_trace(records, vocab=32, seed=10)
+    assert _stream_fingerprint(a) == _stream_fingerprint(b)
+    assert _stream_fingerprint(a) != _stream_fingerprint(c)
+    assert a[0].n_prompt == 6 and a[1].n_prompt == 3
+    with pytest.raises(ValueError, match="vocab"):
+        from_trace(records)          # synthesis needs a vocab
+
+
+def test_trace_file_must_be_list(tmp_path):
+    path = str(tmp_path / "bad.json")
+    with open(path, "w") as f:
+        json.dump({"nope": 1}, f)
+    with pytest.raises(ValueError, match="list"):
+        traffic.load_trace(path)
+
+
+def test_canned_trace_shape():
+    reqs = traffic.canned_trace(vocab=64, tasks=("x", "y"), n_requests=12,
+                                seed=0)
+    assert len(reqs) == 12
+    ts = [r.arrival_s for r in reqs]
+    assert ts[:4] == [0.0] * 4 and ts[4:8] == [4.0] * 4   # two bursts
+    assert ts[8:] == [8.0, 9.0, 10.0, 11.0]               # steady tail
+    assert _stream_fingerprint(reqs) == _stream_fingerprint(
+        traffic.canned_trace(vocab=64, tasks=("x", "y"), n_requests=12,
+                             seed=0))
+
+
+def test_make_dispatch_and_meta():
+    reqs, meta = traffic.make("poisson", vocab=64, seed=4, rate=5.0,
+                              n_requests=6)
+    assert len(reqs) == 6 and meta["traffic"] == "poisson"
+    assert meta["seed"] == 4 and meta["rate"] == 5.0
+    reqs_t, meta_t = traffic.make("trace", vocab=64, seed=4, n_requests=6)
+    assert meta_t["traffic"] == "trace" and meta_t["path"] == "<canned>"
+    with pytest.raises(ValueError, match="unknown traffic"):
+        traffic.make("burst", vocab=64)
+
+
+def test_request_dual_clock_validation():
+    with pytest.raises(ValueError, match="pick one clock"):
+        Request(tokens=np.arange(4, dtype=np.int32), n_new=2,
+                arrival_s=1.0, arrival_step=3)
+    with pytest.raises(ValueError):
+        Request(tokens=np.arange(4, dtype=np.int32), n_new=2, arrival_s=-1.0)
+
+
+def test_request_legacy_arrival_alias_warns():
+    with pytest.warns(DeprecationWarning, match="arrival_step"):
+        r = Request(tokens=np.arange(4, dtype=np.int32), n_new=2, arrival=5)
+    assert r.arrival_step == 5 and r.arrival_s is None
+
+
+def test_to_trace_json_ready():
+    reqs = traffic.canned_trace(vocab=32, n_requests=3, seed=1)
+    records = to_trace(reqs)
+    json.dumps(records)                        # no numpy leaks
+    assert [r["arrival_s"] for r in records] == [0.0, 4.0, 8.0]
