@@ -20,7 +20,14 @@
   * GEMV roofline: the analytic bytes/token model of the fused dequant
     GEMV (each packed word streamed from HBM exactly once — checked
     against the kernel's grid arithmetic) and its ratio over an fp16
-    GEMV; ``--check-sharded`` gates the 4-bit ratio ≥ 3.2×.
+    GEMV; ``--check-sharded`` gates the 4-bit nibble ratio ≥ 3.2×, the
+    3-bit BIT-PLANE ratio ≥ 4.2×, and plane-vs-nibble decode
+    weight-bytes/token ≥ 1.25× (sub-4-bit finally pays in bytes).
+  * Speculative serving: self-speculative decode drafting through the
+    top-3 bit-planes of the 4-bit backbone (zero extra weight memory),
+    verified ``spec_k`` tokens per target step — gates token-for-token
+    equality with greedy and ≥ 1.3× fewer target steps; acceptance rate
+    and tokens/target-step are trajectory-guarded.
   * Mixed-task serving: 3 tasks round-robin through ``Engine.serve``
     under both schedulers; gates token-for-token equality, ZERO
     task-drain idle slot-steps under ``resident`` (>0 under ``drain``),
@@ -78,7 +85,7 @@ def emit_json(outdir: str):
     import os
     os.makedirs(outdir, exist_ok=True)
     serving_keys = ("sharded", "logitshard", "continuous", "mixed_task",
-                    "serving")
+                    "speculative", "serving")
     rows = SINK.metrics
     kern = [m for m in rows if not any(k in m["name"] for k in serving_keys)]
     serv = [m for m in rows if any(k in m["name"] for k in serving_keys)]
@@ -119,12 +126,17 @@ def gemv_roofline(report, check: bool = False) -> bool:
     the word array disjointly — checked below against the kernel's own
     block arithmetic), plus one pass over the (N, G) scale/zero rows.
     4-bit weights therefore move ~4/16 of the fp16 bytes; the gate
-    requires ≥ 3.2× including the scale overhead at group 128.  NOTE:
-    3-bit codes are stored in 4-bit NIBBLES (PACK = 8/word), so sub-4-bit
-    saves quantization levels, not decode bytes — reported honestly.
+    requires ≥ 3.2× including the scale overhead at group 128.
+
+    Layouts: NIBBLE packing (PACK = 8/word) stores 3-bit codes in 4-bit
+    slots, so sub-4-bit saves quantization levels, not decode bytes.
+    BIT-PLANE packing (PLANE_PACK = 32 codes/word/plane, b planes) stores
+    exactly b/8 bytes per weight — 3-bit truly moves 3/8 B/weight.  The
+    gates require the 3-bit plane ratio ≥ 4.2× vs fp16 and ≥ 1.25× fewer
+    decode weight-bytes/token than the nibble layout.
     """
     from repro.kernels.quant_matmul import (DEFAULT_BLOCK_K, DEFAULT_BLOCK_N,
-                                            PACK, aligned_block_k)
+                                            PACK, PLANE_PACK, aligned_block_k)
     from repro.kernels import quant_matmul as qm
     from repro.kernels import ref as kref
     from repro.core.quant import QuantSpec
@@ -163,15 +175,50 @@ def gemv_roofline(report, check: bool = False) -> bool:
             report(f"kernel/gemv_roofline_{name}", 0.0,
                    f"FAIL bytes/token ratio {ratio:.2f}x < 3.2x")
             ok = False
+
+        # bit-plane layout: 3 planes of K/32-word rows — w3 moves 3/8
+        # B/weight for real (nibble w3 still moves 4/8), same scale rows
+        qw3_b = 3 * nn * (kk // PLANE_PACK) * 4
+        q3_total = qw3_b + sz_b + act_b
+        ratio3 = fp16_b / q3_total
+        plane_vs_nibble = q_total / q3_total
+        bk3, _, _ = aligned_block_k(kk, min(DEFAULT_BLOCK_K, kk), group,
+                                    pack=PLANE_PACK)
+        loads3 = (nn // bn) * (kk // bk3) * (3 * bn * bk3 // PLANE_PACK)
+        single3 = loads3 == 3 * nn * kk // PLANE_PACK
+        if not single3:
+            report(f"kernel/gemv_roofline_{name}", 0.0,
+                   f"FAIL plane qw not single-stream: {loads3} word-loads "
+                   f"for {3 * nn * kk // PLANE_PACK} words")
+            ok = False
+        if check and ratio3 < 4.2:
+            report(f"kernel/gemv_roofline_{name}", 0.0,
+                   f"FAIL 3-bit plane bytes/token ratio {ratio3:.2f}x "
+                   f"< 4.2x vs fp16")
+            ok = False
+        if check and plane_vs_nibble < 1.25:
+            report(f"kernel/gemv_roofline_{name}", 0.0,
+                   f"FAIL 3-bit plane moves only {plane_vs_nibble:.2f}x "
+                   f"fewer decode weight-bytes/token than nibble (< 1.25x)")
+            ok = False
+
         report(f"kernel/gemv_roofline_{name}", 0.0,
-               f"bytes/token w4={q_total / 1e6:.2f}MB fp16="
-               f"{fp16_b / 1e6:.2f}MB ratio={ratio:.2f}x "
-               f"(w3 moves the SAME bytes: nibble-packed) "
-               f"single_stream={single}")
+               f"bytes/token w4_nibble={q_total / 1e6:.2f}MB "
+               f"w3_plane={q3_total / 1e6:.2f}MB fp16="
+               f"{fp16_b / 1e6:.2f}MB ratio={ratio:.2f}x/{ratio3:.2f}x "
+               f"plane_vs_nibble={plane_vs_nibble:.2f}x "
+               f"single_stream={single}/{single3}")
         metric(f"kernel/gemv_roofline_{name}", ratio, "x_vs_fp16",
                guard=("higher", 0.15),
                bytes_per_token_w4=q_total, bytes_per_token_fp16=fp16_b,
                single_stream=bool(single), block_n=bn, block_k=bk)
+        metric(f"kernel/gemv_roofline_plane3_{name}", ratio3, "x_vs_fp16",
+               guard=("higher", 0.15),
+               bytes_per_token_w3_plane=q3_total,
+               plane_vs_nibble=plane_vs_nibble,
+               single_stream=bool(single3), block_n=bn, block_k=bk3)
+        metric(f"kernel/gemv_plane_bytes_ratio_{name}", plane_vs_nibble,
+               "x_vs_nibble", guard=("higher", 0.1))
 
     # sanity: the GEMV kernel (interpret mode) is bit-exact vs the
     # blocked-replay oracle at a small shape — the full sweep lives in
@@ -613,6 +660,76 @@ def mixed_task_serving(report, check: bool = False) -> bool:
     return ok
 
 
+def speculative_serving(report, check: bool = False) -> bool:
+    """Self-speculative decode from the bit-plane prefix vs plain greedy.
+
+    A 4-bit plane backbone drafts through its own top-3 planes (zero extra
+    weight memory — the draft IS a prefix read of the target buffer) and
+    verifies ``spec_k`` tokens per target step.  Deterministic gates
+    (check mode): token-for-token equality with greedy, and ≥ 1.3× fewer
+    TARGET steps at ``spec_k`` ≥ 2.  Acceptance rate and tokens emitted
+    per target step are trajectory-guarded (deterministic for the seeded
+    workload); wall tokens/s rides along unguarded.
+    """
+    from repro.serve import ServeConfig
+    from repro.train.serve import Engine, Request
+
+    cfg = configs.paper_lm(n_layers=1, d_model=64, n_heads=2, d_ff=96,
+                           vocab=128).replace(
+        tuning=TuningConfig(mode="peqa"),
+        quant=QuantConfig(bits=4, n_grid=2, layout="plane"))
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p, _ = policies.prepare(api.init(rng), cfg, rng)
+    p = jax.tree.map(np.asarray, p)
+    vocab = cfg.vocab_size
+    mk = lambda: Engine(api, jax.tree.map(jnp.asarray, p))
+
+    reqs = [Request(tokens=(np.arange(6, dtype=np.int32) * (i + 1)) % vocab,
+                    n_new=(16, 24, 32)[i % 3]) for i in range(8)]
+    tokens_total = sum(r.n_new for r in reqs)
+
+    greedy = mk().serve(reqs, ServeConfig(n_slots=4, scheduler="auto"))
+    spec_cfg = ServeConfig(n_slots=4, scheduler="speculative", spec_k=2,
+                           draft_bits=3)
+    mk().serve(reqs, spec_cfg)                             # compile warmup
+    spec = mk().serve(reqs, spec_cfg)
+
+    ok = True
+    for i, (a, b) in enumerate(zip(greedy.tokens, spec.tokens)):
+        if a is None or a != b:
+            report("kernel/speculative", 0.0,
+                   f"FAIL req{i}: speculative tokens diverge from greedy")
+            ok = False
+            break
+    step_ratio = greedy.steps / max(spec.steps, 1)
+    if check and step_ratio < 1.3:
+        report("kernel/speculative", 0.0,
+               f"FAIL target-step ratio {step_ratio:.2f}x < 1.3x "
+               f"(greedy {greedy.steps} vs speculative {spec.steps})")
+        ok = False
+    acc = spec.acceptance_rate or 0.0
+    tok_per_step = spec.decoded / max(spec.steps, 1)
+
+    report("kernel/speculative", spec.wall_s * 1e6,
+           f"tok/s spec={tokens_total / spec.wall_s:.0f} "
+           f"greedy={tokens_total / greedy.wall_s:.0f} "
+           f"target_steps={spec.steps} vs {greedy.steps} "
+           f"({step_ratio:.2f}x) draft_steps={spec.draft_steps} "
+           f"acceptance={acc:.2f} tok/target_step={tok_per_step:.2f}")
+    metric("kernel/speculative", tokens_total / spec.wall_s, "tok/s",
+           wall=True, greedy_tok_s=tokens_total / greedy.wall_s,
+           spec_steps=spec.steps, greedy_steps=greedy.steps,
+           draft_steps=spec.draft_steps, spec_k=2, draft_bits=3)
+    metric("kernel/speculative_step_ratio", step_ratio, "x_vs_greedy",
+           guard=("higher", 0.15))
+    metric("kernel/speculative_acceptance", round(acc, 6), "frac",
+           guard=("higher", 0.2))
+    metric("kernel/speculative_tok_per_target_step", round(tok_per_step, 6),
+           "tok/step", guard=("higher", 0.15))
+    return ok
+
+
 def production_serving(report, check: bool = False,
                        traffic_kind: str = "poisson", seed: int = 0) -> bool:
     """Production traffic through the event-driven admission loop.
@@ -737,6 +854,7 @@ def run(report, traffic_kind: str = "poisson", seed: int = 0):
     sharded_serving(report)
     continuous_serving(report)
     mixed_task_serving(report)
+    speculative_serving(report)
     production_serving(report, traffic_kind=traffic_kind, seed=seed)
 
 
@@ -747,11 +865,13 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--check-sharded", action="store_true",
                     help="run only the roofline + sharded + continuous + "
-                         "mixed-task serving benches; exit 1 on sharding "
-                         "problems / swap collectives / vocab all-gathers "
-                         "/ bubble steps / bytes-per-token regression / "
-                         "task-drain idle under the resident scheduler "
-                         "(the serve-smoke CI gate)")
+                         "mixed-task + speculative serving benches; exit 1 "
+                         "on sharding problems / swap collectives / vocab "
+                         "all-gathers / bubble steps / bytes-per-token "
+                         "regression / task-drain idle under the resident "
+                         "scheduler / speculative-vs-greedy token mismatch "
+                         "or target-step ratio < 1.3x (the serve-smoke CI "
+                         "gate)")
     ap.add_argument("--emit-json", metavar="DIR", default=None,
                     help="write BENCH_kernels.json and BENCH_serving.json "
                          "into DIR (CI artifacts)")
@@ -770,6 +890,7 @@ if __name__ == "__main__":
         passed = sharded_serving(_report, check=True) and passed
         passed = continuous_serving(_report, check=True) and passed
         passed = mixed_task_serving(_report, check=True) and passed
+        passed = speculative_serving(_report, check=True) and passed
         passed = production_serving(_report, check=True,
                                     traffic_kind=args.traffic,
                                     seed=args.seed) and passed

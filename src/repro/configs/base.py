@@ -16,6 +16,7 @@ class QuantConfig:
     group_size: Optional[int] = None   # None = per-channel (paper default)
     packed: bool = True
     symmetric: bool = False
+    layout: str = "nibble"             # nibble | plane (true b-bit HBM stream)
     quantize_lm_head: bool = False
     n_grid: int = 20                   # RTN range grid-search points
 
@@ -23,7 +24,8 @@ class QuantConfig:
         from repro.core.quant import QuantSpec
 
         return QuantSpec(bits=self.bits, group_size=self.group_size,
-                         symmetric=self.symmetric, packed=self.packed)
+                         symmetric=self.symmetric, packed=self.packed,
+                         layout=self.layout)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -19,7 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, QuantConfig
-from repro.core.quant import QuantSpec, pack_codes, rtn_quantize, unpack_codes
+from repro.core.quant import (PLANE_PACK, QuantSpec, pack_codes,
+                              pack_codes_planes, rtn_quantize, unpack_codes,
+                              unpack_codes_planes)
 
 # paths whose "w" leaf must never be quantized
 EXCLUDE = re.compile(
@@ -38,6 +40,8 @@ def eligible(path: str, leaf, qcfg: QuantConfig) -> bool:
     spec = qcfg.spec()
     if spec.packs and m % 8:
         return False
+    if spec.plane and m % PLANE_PACK:
+        return False
     if spec.group_size and m % spec.group_size:
         return False
     return True
@@ -52,6 +56,8 @@ def quantize_leaf(w, qcfg: QuantConfig):
 
     def one(wi):
         q, s, z = rtn_quantize(wi, spec, n_grid=qcfg.n_grid)
+        if spec.plane:
+            return pack_codes_planes(q, spec.bits), s, z
         return (pack_codes(q) if spec.packs else q), s, z
 
     qw, s, z = jax.lax.map(one, flat)   # sequential: bounds peak memory
@@ -105,15 +111,20 @@ def dequantize_params(params: dict, qcfg: QuantConfig) -> dict:
             if isinstance(val, dict):
                 if "qw" in val:
                     qw, s, z = val["qw"], val["scale"], val["zero"]
-                    lead = qw.shape[:-2]
+                    # plane layout carries a leading (bits,) dim on qw
+                    core_dims = 3 if spec.plane else 2
+                    lead = qw.shape[:-core_dims]
                     n = qw.shape[-2]
-                    flatq = qw.reshape(-1, *qw.shape[-2:])
+                    flatq = qw.reshape(-1, *qw.shape[-core_dims:])
                     flats = s.reshape(-1, *s.shape[-2:])
                     flatz = z.reshape(-1, *z.shape[-2:])
 
                     def deq(args):
                         q_, s_, z_ = args
-                        codes = unpack_codes(q_) if spec.packs else q_
+                        if spec.plane:
+                            codes = unpack_codes_planes(q_)
+                        else:
+                            codes = unpack_codes(q_) if spec.packs else q_
                         g = s_.shape[-1]
                         m = codes.shape[-1]
                         cg = codes.reshape(n, g, m // g).astype(jnp.float32)
@@ -141,6 +152,9 @@ def model_size_bytes(params: dict, qcfg: QuantConfig) -> int:
     def count(path, leaf):
         nonlocal total
         if path.endswith("/qw"):
+            if spec.plane:
+                total += leaf.size * 4     # b bit-planes of uint32: raw bytes
+                return
             n_codes = leaf.size * (8 if spec.packs else 1)
             total += n_codes * qcfg.bits // 8
         else:

@@ -17,10 +17,17 @@ Zero-points are kept in float (z is only ever used *subtracted from* q before
 scaling — exactly Eq. (1) — so a float z costs nothing at inference and lets
 the grid search hit the true LSQ optimum).
 
-Packing: sub-4-bit codes are bit-packed into uint32 words along the input
-dimension for storage/kernels — 8×int4 per word, or int3 stored 8-per-word in
-the low 3 bits of nibbles (simple, keeps K-indexing identical to int4; HBM
-stream for the Pallas kernel is what matters and is handled there).
+Packing — two layouts:
+
+  * ``nibble`` (legacy): 8 codes per uint32 word, one nibble each.  A 3-bit
+    code rides in a 4-bit nibble, so sub-4-bit buys quantization levels but
+    NOT decode bytes.
+  * ``plane``: codes are stored as ``bits`` packed bit-planes, most
+    significant plane first — ``qw[p]`` is a (N, K/32) uint32 array holding
+    bit ``bits-1-p`` of every code.  A b-bit tensor streams exactly b
+    bits/weight from HBM, and the top-p planes ``qw[:p]`` are, standing
+    alone, the p-bit truncation of every code: a low-bit *draft* reads a
+    contiguous prefix of the target's buffer — zero extra weight memory.
 """
 from __future__ import annotations
 
@@ -36,6 +43,9 @@ import numpy as np
 # 3-bit code simply never sets its top nibble bit).
 PACK = 8
 
+# Codes per uint32 word per bit-plane (one bit per code per plane).
+PLANE_PACK = 32
+
 
 @dataclasses.dataclass(frozen=True)
 class QuantSpec:
@@ -45,6 +55,7 @@ class QuantSpec:
     group_size: Optional[int] = None  # None → per-channel (one group = whole row)
     symmetric: bool = False        # paper uses asymmetric (zero-points)
     packed: bool = True            # bit-pack codes into uint32
+    layout: str = "nibble"         # nibble (8 codes/word) | plane (bit-planes)
     scale_dtype: jnp.dtype = jnp.float32
 
     @property
@@ -55,7 +66,13 @@ class QuantSpec:
     def packs(self) -> bool:
         """Nibble packing only holds codes < 16 (bits ≤ 4); wider codes are
         stored unpacked uint8."""
-        return self.packed and self.bits <= 4
+        return self.packed and self.bits <= 4 and self.layout == "nibble"
+
+    @property
+    def plane(self) -> bool:
+        """Bit-plane packed: ``qw`` is (bits', N, K/32) uint32 with
+        ``bits' >= bits`` — decode consumes the top ``bits`` planes."""
+        return self.packed and self.layout == "plane"
 
     def n_groups(self, in_features: int) -> int:
         if self.group_size is None:
@@ -69,9 +86,15 @@ class QuantSpec:
     def validate(self, in_features: int) -> None:
         if not (2 <= self.bits <= 8):
             raise ValueError(f"bits must be in [2, 8], got {self.bits}")
+        if self.layout not in ("nibble", "plane"):
+            raise ValueError(f"unknown layout {self.layout!r} "
+                             f"(know: nibble, plane)")
         self.n_groups(in_features)
         if self.packs and in_features % PACK:
             raise ValueError(f"packed layout needs in_features % {PACK} == 0")
+        if self.plane and in_features % PLANE_PACK:
+            raise ValueError(
+                f"plane layout needs in_features % {PLANE_PACK} == 0")
 
 
 # ---------------------------------------------------------------------------
@@ -96,6 +119,66 @@ def unpack_codes(packed: jax.Array, k: Optional[int] = None) -> jax.Array:
     if k is not None:
         q = q[..., :k]
     return q.astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Bit-plane pack / unpack (plane-major, MSB first: qw[:p] IS the p-bit draft)
+# ---------------------------------------------------------------------------
+
+def pack_codes_planes(q: jax.Array, bits: int) -> jax.Array:
+    """Pack uint codes (…, K) < 2**bits into uint32 planes (bits, …, K//32).
+
+    Plane p holds bit ``bits-1-p`` of every code (most significant first),
+    32 codes per word, code ``i`` in bit ``i`` of its word.  The layout is
+    chosen so the top-p planes are a contiguous buffer prefix AND decode,
+    on their own, to ``code >> (bits-p)`` — the p-bit truncation a low-bit
+    draft serves under rescaled (scale, zero).
+    """
+    if q.shape[-1] % PLANE_PACK:
+        raise ValueError(
+            f"last dim {q.shape[-1]} not divisible by {PLANE_PACK}")
+    q = q.astype(jnp.uint32)
+    # (bits, …, K): bit bits-1-p of each code
+    sel = jnp.arange(bits, dtype=jnp.uint32)[::-1]
+    sel = sel.reshape((bits,) + (1,) * q.ndim)
+    planes = (q[None] >> sel) & jnp.uint32(1)
+    planes = planes.reshape(bits, *q.shape[:-1], q.shape[-1] // PLANE_PACK,
+                            PLANE_PACK)
+    shifts = jnp.arange(PLANE_PACK, dtype=jnp.uint32)
+    return jnp.sum(planes << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_codes_planes(packed: jax.Array, k: Optional[int] = None,
+                        bits: Optional[int] = None) -> jax.Array:
+    """Unpack uint32 planes (bits', …, K//32) → uint8 codes (…, K).
+
+    ``bits`` (≤ bits') consumes only the top planes — the draft decode.
+    """
+    bits = packed.shape[0] if bits is None else bits
+    shifts = jnp.arange(PLANE_PACK, dtype=jnp.uint32)
+    b = (packed[:bits, ..., None] >> shifts) & jnp.uint32(1)
+    b = b.reshape(bits, *packed.shape[1:-1], packed.shape[-1] * PLANE_PACK)
+    weight = jnp.arange(bits, dtype=jnp.uint32)[::-1]
+    weight = weight.reshape((bits,) + (1,) * (b.ndim - 1))
+    q = jnp.sum(b << weight, axis=0, dtype=jnp.uint32)
+    if k is not None:
+        q = q[..., :k]
+    return q.astype(jnp.uint8)
+
+
+def draft_scales(scale: jax.Array, zero: jax.Array, bits: int,
+                 draft_bits: int):
+    """(scale, zero) for decoding the top ``draft_bits`` planes of a
+    ``bits``-bit tensor.
+
+    The p-bit truncation satisfies ``q ≈ q_p · 2**(b-p)``, so
+    ``s·(q − z) ≈ (s·2**(b-p)) · (q_p − z/2**(b-p))`` — the draft reuses
+    the target's trained scales, rescaled.  This is the default draft
+    scale set; a task may also train dedicated p-bit scales (PEQA's whole
+    point) and install them instead.
+    """
+    f = float(1 << (bits - draft_bits))
+    return scale * f, zero / f
 
 
 # ---------------------------------------------------------------------------
@@ -215,6 +298,9 @@ class QTensor:
 
     @property
     def codes(self) -> jax.Array:
+        if self.spec.plane:
+            return unpack_codes_planes(self.qw, self.shape[-1],
+                                       self.spec.bits)
         if self.spec.packs:
             return unpack_codes(self.qw, self.shape[-1])
         return self.qw
@@ -226,7 +312,12 @@ class QTensor:
     def quantize(cls, w: jax.Array, spec: QuantSpec, *, n_grid: int = 20) -> "QTensor":
         spec.validate(w.shape[-1])
         q, s, z = rtn_quantize(w, spec, n_grid=n_grid)
-        qw = pack_codes(q) if spec.packs else q
+        if spec.plane:
+            qw = pack_codes_planes(q, spec.bits)
+        elif spec.packs:
+            qw = pack_codes(q)
+        else:
+            qw = q
         return cls(qw=qw, scale=s, zero=z, shape=tuple(w.shape), spec=spec)
 
     def nbytes_ideal(self) -> int:

@@ -17,8 +17,15 @@ the O(B·V) all-gather the replicated layout forces.
     order is shard-major so cross-shard ties resolve to the smaller global
     index, same as ``jax.lax.top_k`` on gathered logits; equal values
     *within* one shard beyond its local k can permute the tail.
+  * ``shard_sample`` — temperature sampling by the Gumbel-max trick:
+    argmax(logits/T + g) samples the softmax exactly, and ``g`` is
+    generated PER SHARD from ``fold_in(key, global row) ∘ fold_in(global
+    vocab index)`` — the noise field is a pure function of (key, row,
+    vocab id), NOT of the layout, so any mesh shape (or no mesh) draws
+    the identical token stream and the winner reduce stays the O(B)
+    scalar collective of ``shard_argmax``.
 
-Both are ``shard_map`` factories: build once per (mesh, batch layout), jit
+All are ``shard_map`` factories: build once per (mesh, batch layout), jit
 the result.  Outside a mesh they are plain ``jnp`` reductions, so the
 engine can call one code path everywhere.
 """
@@ -91,6 +98,83 @@ def shard_argmax_masked(ctx, batch: int, fill: int = 0):
 
     def sample(lg, active):
         return jnp.where(active, base(lg), jnp.int32(fill))
+    return sample
+
+
+def _gumbel_field(key, rows, gidx):
+    """(len(rows), len(gidx)) standard Gumbel noise; element (b, i) is a
+    pure function of (key, rows[b], gidx[i]).  Keying every element on its
+    GLOBAL coordinates (not its position in the local slice) is what makes
+    the sampled stream invariant to resharding: a shard holding vocab
+    columns [s, s+v) draws exactly the columns [s, s+v) of the one logical
+    noise field."""
+    def elem(r, i):
+        k = jax.random.fold_in(jax.random.fold_in(key, r), i)
+        u = jax.random.uniform(k, (), jnp.float32,
+                               minval=jnp.finfo(jnp.float32).tiny,
+                               maxval=1.0)
+        return -jnp.log(-jnp.log(u))
+    return jax.vmap(lambda r: jax.vmap(lambda i: elem(r, i))(gidx))(rows)
+
+
+def _axis_tuple(ba):
+    if ba is None:
+        return ()
+    return (ba,) if isinstance(ba, str) else tuple(ba)
+
+
+def _local_sample(lg, key, *, axis, batch_axes, vocab, temperature):
+    """Inside shard_map: perturb the local slice, reduce like argmax."""
+    b, v = lg.shape
+    start = jax.lax.axis_index(axis) * v
+    gidx = start + jnp.arange(v)
+    off = jnp.int32(0)                     # global row = shard offset + local
+    for a in _axis_tuple(batch_axes):      # axes nest outer→inner
+        off = off * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    rows = jnp.arange(b) + off * b
+    g = _gumbel_field(key, rows, gidx)
+    z = lg.astype(jnp.float32) / temperature + g
+    li = jnp.argmax(z, axis=-1)
+    lv = jnp.take_along_axis(z, li[:, None], axis=-1)[:, 0]
+    gi = (li + start).astype(jnp.int32)
+    vmax = jax.lax.pmax(lv, axis)
+    cand = jnp.where(lv == vmax, gi, jnp.int32(vocab))
+    return jax.lax.pmin(cand, axis)
+
+
+def shard_sample(ctx, batch: int, temperature: float):
+    """Temperature sampler over (possibly vocab-sharded) logits →
+    ``fn(logits (B, V), key) -> (B,) int32``.
+
+    Gumbel-max: argmax(logits/T + Gumbel) is an exact softmax(logits/T)
+    sample, and it inherits ``shard_argmax``'s O(B)-byte winner reduce —
+    no vocab gather, no materialised probability row.  The noise is keyed
+    on (key, global row, global vocab index), so the token stream is
+    bit-identical across mesh shapes AND to the off-mesh path (the
+    reshard-invariance test in tests/test_sharding.py pins this).
+
+    ``temperature <= 0`` degrades to greedy (``shard_argmax``) with the
+    same (lg, key) signature, so callers never branch.
+    """
+    if temperature <= 0:
+        base = shard_argmax(ctx, batch)
+        return lambda lg, key: base(lg)
+    if ctx is None:
+        def dense(lg, key):
+            b, v = lg.shape
+            g = _gumbel_field(key, jnp.arange(b), jnp.arange(v))
+            z = lg.astype(jnp.float32) / temperature + g
+            return jnp.argmax(z, axis=-1).astype(jnp.int32)
+        return dense
+    ba = ctx.batch_axes(batch)
+
+    def sample(lg, key):
+        return shard_map(
+            partial(_local_sample, axis=ctx.model_axis, batch_axes=ba,
+                    vocab=lg.shape[-1], temperature=float(temperature)),
+            mesh=ctx.mesh,
+            in_specs=(P(ba, ctx.model_axis), P()),
+            out_specs=P(ba), check_rep=False)(lg, key)
     return sample
 
 

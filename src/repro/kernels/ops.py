@@ -30,7 +30,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import PACK, QuantSpec, unpack_codes
+from repro.core.quant import (PACK, QuantSpec, unpack_codes,
+                              unpack_codes_planes)
 from repro.kernels import ref as _ref
 
 _tls = threading.local()
@@ -84,12 +85,15 @@ def default_impl() -> str:
 
 
 def _codes_f32(qw, k, spec: QuantSpec):
-    codes = unpack_codes(qw, k) if spec.packs else qw
+    if spec.plane:
+        codes = unpack_codes_planes(qw, k, spec.bits)
+    else:
+        codes = unpack_codes(qw, k) if spec.packs else qw
     return codes.astype(jnp.float32)
 
 
 def _dequant(qw, scale, zero, k, spec: QuantSpec, dtype):
-    n = qw.shape[0]
+    n = qw.shape[1] if spec.plane else qw.shape[0]
     g = scale.shape[-1]
     codes = _codes_f32(qw, k, spec).reshape(n, g, k // g)
     w = scale.astype(jnp.float32)[..., None] * (codes - zero.astype(jnp.float32)[..., None])
@@ -103,7 +107,7 @@ def _qmm_fwd_impl(x2d, qw, scale, zero, spec: QuantSpec, impl: str,
         from repro.kernels import quant_matmul as _qm
 
         interp = impl == "interpret"
-        if x2d.shape[0] <= GEMV_MAX_M and spec.packs:
+        if x2d.shape[0] <= GEMV_MAX_M and (spec.packs or spec.plane):
             return _qm.quant_gemv_pallas(
                 x2d, qw, scale.astype(jnp.float32), zero.astype(jnp.float32),
                 spec=spec, interpret=interp,
@@ -113,7 +117,7 @@ def _qmm_fwd_impl(x2d, qw, scale, zero, spec: QuantSpec, impl: str,
             spec=spec, interpret=interp,
         )
     if impl == "ref":
-        n = qw.shape[0]
+        n = qw.shape[1] if spec.plane else qw.shape[0]
         return _ref.quant_matmul_ref(x2d, qw, scale, zero, (n, k), spec)
     # xla fast path: dequant in activation dtype, let XLA fuse into the dot
     w = _dequant(qw, scale, zero, k, spec, x2d.dtype)
@@ -136,7 +140,7 @@ def _qmm_fwd(x2d, qw, scale, zero, spec, impl, bf16_reduce):
 def _qmm_bwd(spec, impl, bf16_reduce, res, dy):
     x2d, qw, scale, zero = res
     k = x2d.shape[-1]
-    n = qw.shape[0]
+    n = qw.shape[1] if spec.plane else qw.shape[0]
     g = scale.shape[-1]
     w = _dequant(qw, scale, zero, k, spec, x2d.dtype)          # (N, K)
     dx = jax.lax.dot_general(                                   # dy @ W
@@ -211,7 +215,7 @@ def quant_matmul_slotted(
     impl = _check_impl(impl or default_impl())
     lead = x.shape[:-1]
     k = x.shape[-1]
-    n = qw.shape[0]
+    n = qw.shape[1] if spec.plane else qw.shape[0]
     x2d = x.reshape(-1, k)
     if x2d.shape[0] != task_ids.shape[0]:
         raise ValueError(

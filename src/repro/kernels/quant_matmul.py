@@ -31,9 +31,17 @@ split across ``blocks_per_group`` K-blocks instead of blowing VMEM with a
 single K block — Ŵ = s·(q − z) is linear in the K-sum, so a group may
 straddle block boundaries exactly.
 
-3-bit weights use the same nibble layout (top bit of each nibble unused) —
-the HBM stream is then 4 bits/weight; true 3-bit packing is a storage-side
-concern handled analytically for the paper's model-size tables (DESIGN.md §6).
+Two storage layouts share the tile loop:
+
+  * ``nibble`` — 8 codes per uint32 word; 3-bit rides in nibbles, so the
+    HBM stream is 4 bits/weight regardless.
+  * ``plane``  — codes stored as ``bits`` packed bit-planes (MSB plane
+    first, 32 codes/word/plane; core.quant.pack_codes_planes).  A b-bit
+    tensor streams exactly b bits/weight, and a ``spec.bits = p`` view of
+    a wider buffer loads only the top-p planes (the BlockSpec's plane axis
+    is a prefix slice) — the zero-copy low-bit DRAFT behind
+    self-speculative decoding.  The single-stream invariant holds per
+    plane: each consumed word crosses HBM exactly once.
 """
 from __future__ import annotations
 
@@ -45,7 +53,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.quant import PACK, QuantSpec
+from repro.core.quant import PACK, PLANE_PACK, QuantSpec
 
 DEFAULT_BLOCK_M = 128
 DEFAULT_BLOCK_N = 128
@@ -53,13 +61,14 @@ DEFAULT_BLOCK_K = 512
 
 
 def aligned_block_k(k: int, block_k: int, group: int,
-                    packs: bool = True) -> tuple:
+                    packs: bool = True, pack: int | None = None) -> tuple:
     """K-block size for the dequant kernels.
 
     Returns ``(bk, groups_per_blk, blocks_per_group)`` with ``bk | k`` and
-    ``bk`` a multiple of the pack word (8 nibbles) when ``packs``:
+    ``bk`` a multiple of the pack word (``pack`` codes — 8 for nibbles,
+    32 for bit-planes, overriding the ``packs`` bool when given):
 
-      * group fits a block → bk = largest multiple of lcm(group, 8) that
+      * group fits a block → bk = largest multiple of lcm(group, pack) that
         divides k and is ≤ block_k (groups_per_blk ≥ 1, blocks_per_group 1);
       * group exceeds block_k (per-channel scales, large K) → the group is
         split: bk = largest pack-aligned divisor of the group ≤ block_k
@@ -68,7 +77,8 @@ def aligned_block_k(k: int, block_k: int, group: int,
     The old behaviour — falling back to ``bk = k`` whenever ``k % bk`` —
     made large-K layers allocate a full-K VMEM tile.
     """
-    pack = PACK if packs else 1
+    if pack is None:
+        pack = PACK if packs else 1
     unit = group * pack // math.gcd(group, pack)         # lcm(group, pack)
     if unit <= block_k:
         bk = max(c for c in range(unit, block_k + 1, unit) if k % c == 0)
@@ -85,6 +95,37 @@ def _unpack_nibbles(words: jax.Array, bk: int) -> jax.Array:
     return codes.reshape(words.shape[0], bk).astype(jnp.float32)
 
 
+def _unpack_planes(words: jax.Array, bk: int) -> jax.Array:
+    """uint32 planes (p, bn, bk/32) → float32 codes (bn, bk).
+
+    Plane 0 is the most significant of the p planes consumed, so the same
+    expression decodes both the full b-bit codes (p = b) and the p-bit
+    draft truncation (p < b, the BlockSpec having loaded only the prefix).
+    """
+    p, bn = words.shape[0], words.shape[1]
+    shifts = jnp.arange(PLANE_PACK, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)       # (p, bn, w, 32)
+    bits = bits.reshape(p, bn, bk)
+    weight = (jnp.uint32(1) << jnp.arange(p, dtype=jnp.uint32))[::-1]
+    codes = jnp.sum(bits * weight[:, None, None], axis=0, dtype=jnp.uint32)
+    return codes.astype(jnp.float32)
+
+
+def _qw_layout(spec: QuantSpec, bn: int, bk: int):
+    """(pack unit, words-per-block, unpack fn, BlockSpec block + index fn).
+
+    The returned index fn takes the (j, kk) tile coordinates; the plane
+    layout's leading axis always indexes block 0 — a ``spec.bits``-sized
+    prefix of however many planes the stored buffer holds.
+    """
+    if spec.plane:
+        blk = (spec.bits, bn, bk // PLANE_PACK)
+        return (PLANE_PACK, bk // PLANE_PACK, _unpack_planes, blk,
+                lambda j, kk: (0, j, kk))
+    blk = (bn, bk // PACK)
+    return PACK, bk // PACK, _unpack_nibbles, blk, lambda j, kk: (j, kk)
+
+
 def _dequant_tile(codes: jax.Array, scale: jax.Array, zero: jax.Array,
                   groups_per_blk: int) -> jax.Array:
     """(bn, bk) f32 codes + (bn, G_blk) scales/zeros → Ŵ tile (bn, bk) f32.
@@ -99,7 +140,8 @@ def _dequant_tile(codes: jax.Array, scale: jax.Array, zero: jax.Array,
 
 
 def _qmm_kernel(x_ref, qw_ref, scale_ref, zero_ref, o_ref, acc_ref,
-                *, n_k: int, bk: int, groups_per_blk: int, out_dtype):
+                *, n_k: int, bk: int, groups_per_blk: int, out_dtype,
+                unpack=_unpack_nibbles):
     """One (bm, bn) output tile; K-loop via grid dim 2 (innermost)."""
     k_idx = pl.program_id(2)
 
@@ -108,7 +150,7 @@ def _qmm_kernel(x_ref, qw_ref, scale_ref, zero_ref, o_ref, acc_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...]                                  # (bm, bk)   bf16/f32
-    codes = _unpack_nibbles(qw_ref[...], bk)        # (bn, bk)   f32
+    codes = unpack(qw_ref[...], bk)                 # (bn, bk)   f32
     w = _dequant_tile(codes, scale_ref[...], zero_ref[...], groups_per_blk)
     acc_ref[...] += jax.lax.dot_general(
         x.astype(jnp.float32), w,
@@ -140,15 +182,17 @@ def quant_matmul_pallas(
 ) -> jax.Array:
     """y = x @ Ŵᵀ with Ŵ = scale · (codes − zero);  returns (M, N)."""
     m, k = x.shape
-    n = qw.shape[0]
+    n = qw.shape[1] if spec.plane else qw.shape[0]
     g = scale.shape[-1]
     group = k // g
     out_dtype = out_dtype or x.dtype
 
     bm = min(block_m, m)
     bn = min(block_n, n)
+    pack = PLANE_PACK if spec.plane else (PACK if spec.packs else 1)
     bk, groups_per_blk, blocks_per_group = aligned_block_k(
-        k, min(block_k, k), group, spec.packs)
+        k, min(block_k, k), group, spec.packs, pack=pack)
+    _, _, unpack, qw_blk, qw_idx = _qw_layout(spec, bn, bk)
     n_k = k // bk
 
     grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), n_k)
@@ -157,11 +201,12 @@ def quant_matmul_pallas(
         functools.partial(
             _qmm_kernel, n_k=n_k, bk=bk,
             groups_per_blk=groups_per_blk, out_dtype=out_dtype,
+            unpack=unpack,
         ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bn, bk // PACK), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec(qw_blk, lambda i, j, kk, f=qw_idx: f(j, kk)),
             pl.BlockSpec((bn, groups_per_blk),
                          lambda i, j, kk, gd=blocks_per_group: (j, kk // gd)),
             pl.BlockSpec((bn, groups_per_blk),
@@ -175,7 +220,8 @@ def quant_matmul_pallas(
 
 
 def _qgemv_kernel(x_ref, qw_ref, scale_ref, zero_ref, o_ref, acc_ref,
-                  *, n_k: int, bk: int, groups_per_blk: int, out_dtype):
+                  *, n_k: int, bk: int, groups_per_blk: int, out_dtype,
+                  unpack=_unpack_nibbles):
     """One (M, bn) output stripe; K-loop via grid dim 1 (innermost)."""
     k_idx = pl.program_id(1)
 
@@ -184,7 +230,7 @@ def _qgemv_kernel(x_ref, qw_ref, scale_ref, zero_ref, o_ref, acc_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...]                                  # (M, bk)  VMEM-resident
-    codes = _unpack_nibbles(qw_ref[...], bk)        # (bn, bk) — one HBM visit
+    codes = unpack(qw_ref[...], bk)                 # (bn, bk) — one HBM visit
     w = _dequant_tile(codes, scale_ref[...], zero_ref[...], groups_per_blk)
     acc_ref[...] += jax.lax.dot_general(
         x.astype(jnp.float32), w,
@@ -199,7 +245,8 @@ def _qgemv_kernel(x_ref, qw_ref, scale_ref, zero_ref, o_ref, acc_ref,
 
 def _qgemv_tasks_kernel(tid_ref, x_ref, qw_ref, scale_ref, zero_ref,
                         o_ref, acc_ref, *, n_k: int, bk: int,
-                        groups_per_blk: int, n_tasks: int, out_dtype):
+                        groups_per_blk: int, n_tasks: int, out_dtype,
+                        unpack=_unpack_nibbles):
     """Task-stacked GEMV tile: per-slot scale rows selected in-kernel.
 
     ``tid_ref`` is the scalar-prefetched slot→task map (SMEM); scale/zero
@@ -218,7 +265,7 @@ def _qgemv_tasks_kernel(tid_ref, x_ref, qw_ref, scale_ref, zero_ref,
 
     x = x_ref[...]
     m = x.shape[0]
-    codes = _unpack_nibbles(qw_ref[...], bk)
+    codes = unpack(qw_ref[...], bk)
     tids = tid_ref[...].reshape(m, 1)               # (M, 1) int32
     y = jnp.zeros((m, codes.shape[0]), jnp.float32)
     for t in range(n_tasks):                        # static unroll, T small
@@ -258,23 +305,29 @@ def quant_gemv_pallas(
     Plain call (task_ids None): same math as quant_matmul_pallas with a
     single M block.  Slotted call: scale/zero are (T, N, G) stacks and
     ``task_ids[i]`` picks slot i's row inside the tile loop.
+
+    Plane layout (``spec.plane``): ``qw`` is (bits', N, K/32) and only the
+    top ``spec.bits`` planes are streamed — with ``bits' > spec.bits`` this
+    is the draft decode reading a prefix of the target's buffer.
     """
-    if not spec.packs:
+    if not (spec.packs or spec.plane):
         raise NotImplementedError("quant_gemv_pallas needs packed codes")
     m, k = x.shape
-    n = qw.shape[0]
+    n = qw.shape[1] if spec.plane else qw.shape[0]
     g = scale.shape[-1]
     group = k // g
     out_dtype = out_dtype or x.dtype
 
     bn = min(block_n, n)
+    pack = PLANE_PACK if spec.plane else PACK
     bk, groups_per_blk, blocks_per_group = aligned_block_k(
-        k, min(block_k, k), group, spec.packs)
+        k, min(block_k, k), group, pack=pack)
+    _, _, unpack, qw_blk, qw_idx = _qw_layout(spec, bn, bk)
     n_k = k // bk
     grid = (pl.cdiv(n, bn), n_k)
 
     x_spec = pl.BlockSpec((m, bk), lambda j, kk, *_: (0, kk))
-    qw_spec = pl.BlockSpec((bn, bk // PACK), lambda j, kk, *_: (j, kk))
+    qw_spec = pl.BlockSpec(qw_blk, lambda j, kk, *_, f=qw_idx: f(j, kk))
     out_spec = pl.BlockSpec((m, bn), lambda j, kk, *_: (0, j))
     scratch = [pltpu.VMEM((m, bn), jnp.float32)]
     out_shape = jax.ShapeDtypeStruct((m, n), out_dtype)
@@ -287,6 +340,7 @@ def quant_gemv_pallas(
             functools.partial(
                 _qgemv_kernel, n_k=n_k, bk=bk,
                 groups_per_blk=groups_per_blk, out_dtype=out_dtype,
+                unpack=unpack,
             ),
             grid=grid,
             in_specs=[x_spec, qw_spec, sz_spec, sz_spec],
@@ -311,7 +365,7 @@ def quant_gemv_pallas(
         functools.partial(
             _qgemv_tasks_kernel, n_k=n_k, bk=bk,
             groups_per_blk=groups_per_blk, n_tasks=n_tasks,
-            out_dtype=out_dtype,
+            out_dtype=out_dtype, unpack=unpack,
         ),
         grid_spec=grid_spec,
         out_shape=out_shape,

@@ -8,13 +8,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import QuantSpec, unpack_codes
+from repro.core.quant import QuantSpec, unpack_codes, unpack_codes_planes
 
 
 def dequant_ref(qw, scale, zero, shape, spec: QuantSpec, dtype=jnp.bfloat16):
     """Ŵ = s·(q−z) from (possibly packed) codes. shape = logical (n, m)."""
     n, m = shape
-    codes = unpack_codes(qw, m) if spec.packs else qw
+    if spec.plane:
+        codes = unpack_codes_planes(qw, m, spec.bits)
+    else:
+        codes = unpack_codes(qw, m) if spec.packs else qw
     g = scale.shape[-1]
     qg = codes.reshape(n, g, m // g).astype(jnp.float32)
     w = scale[..., None].astype(jnp.float32) * (qg - zero[..., None].astype(jnp.float32))
@@ -56,8 +59,8 @@ def quant_gemv_ref(x, qw, scale, zero, shape, spec: QuantSpec, *,
     scale/zero: (N, G), or (T, N, G) stacks when task_ids is given.
     """
     from repro.kernels.quant_matmul import (
-        DEFAULT_BLOCK_K, DEFAULT_BLOCK_N, PACK, _dequant_tile,
-        _unpack_nibbles, aligned_block_k)
+        DEFAULT_BLOCK_K, DEFAULT_BLOCK_N, PACK, PLANE_PACK, _dequant_tile,
+        _unpack_nibbles, _unpack_planes, aligned_block_k)
 
     block_n = block_n or DEFAULT_BLOCK_N
     block_k = block_k or DEFAULT_BLOCK_K
@@ -66,15 +69,20 @@ def quant_gemv_ref(x, qw, scale, zero, shape, spec: QuantSpec, *,
     m = x.shape[0]
     group = k // scale.shape[-1]
     bn = min(block_n, n)
-    bk, gpb, gdiv = aligned_block_k(k, min(block_k, k), group, spec.packs)
-    wpb = bk // PACK
+    pack = PLANE_PACK if spec.plane else PACK
+    bk, gpb, gdiv = aligned_block_k(k, min(block_k, k), group, pack=pack)
+    wpb = bk // pack
 
     cols = []
     for j in range((n + bn - 1) // bn):
         nsl = slice(j * bn, min((j + 1) * bn, n))
         acc = jnp.zeros((m, nsl.stop - nsl.start), jnp.float32)
         for kk in range(k // bk):
-            codes = _unpack_nibbles(qw[nsl, kk * wpb:(kk + 1) * wpb], bk)
+            if spec.plane:
+                codes = _unpack_planes(
+                    qw[:spec.bits, nsl, kk * wpb:(kk + 1) * wpb], bk)
+            else:
+                codes = _unpack_nibbles(qw[nsl, kk * wpb:(kk + 1) * wpb], bk)
             gsl = slice((kk // gdiv) * gpb, (kk // gdiv) * gpb + gpb)
             xb = x[:, kk * bk:(kk + 1) * bk].astype(jnp.float32)
 
@@ -99,9 +107,11 @@ def quant_gemv_ref(x, qw, scale, zero, shape, spec: QuantSpec, *,
 
 def rtn_pack_ref(w, spec: QuantSpec, n_grid: int = 20):
     """Oracle for the fused RTN quantize+pack kernel = core.quant.rtn_quantize."""
-    from repro.core.quant import pack_codes, rtn_quantize
+    from repro.core.quant import pack_codes, pack_codes_planes, rtn_quantize
 
     q, s, z = rtn_quantize(w, spec, n_grid=n_grid)
+    if spec.plane:
+        return pack_codes_planes(q, spec.bits), s, z
     return (pack_codes(q) if spec.packs else q), s, z
 
 

@@ -22,14 +22,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.quant import PACK, QuantSpec
+from repro.core.quant import PACK, PLANE_PACK, QuantSpec
 
 DEFAULT_BLOCK_N = 64
 
 
-def _rtn_pack_kernel(w_ref, qw_ref, scale_ref, zero_ref,
-                     *, levels: int, group: int):
-    w = w_ref[...].astype(jnp.float32)              # (bn, bk)
+def _rtn_quantize_block(w, levels: int, group: int):
+    """Shared per-block min/max RTN: (bn, bk) f32 → (q codes, scale, zero)."""
     bn, bk = w.shape
     g_blk = bk // group
     wg = w.reshape(bn, g_blk, group)
@@ -38,9 +37,35 @@ def _rtn_pack_kernel(w_ref, qw_ref, scale_ref, zero_ref,
     scale = jnp.maximum((hi - lo) / levels, 1e-12)  # (bn, g_blk)
     zero = -lo / scale
     q = jnp.clip(jnp.round(wg / scale[..., None] + zero[..., None]), 0, levels)
+    return q.reshape(bn, bk), scale, zero
+
+
+def _rtn_pack_kernel(w_ref, qw_ref, scale_ref, zero_ref,
+                     *, levels: int, group: int):
+    w = w_ref[...].astype(jnp.float32)              # (bn, bk)
+    bn, bk = w.shape
+    q, scale, zero = _rtn_quantize_block(w, levels, group)
     q = q.reshape(bn, bk // PACK, PACK).astype(jnp.uint32)
     shifts = jnp.arange(PACK, dtype=jnp.uint32) * 4
     qw_ref[...] = jnp.sum(q << shifts, axis=-1, dtype=jnp.uint32)
+    scale_ref[...] = scale
+    zero_ref[...] = zero
+
+
+def _rtn_pack_planes_kernel(w_ref, qw_ref, scale_ref, zero_ref,
+                            *, levels: int, group: int, bits: int):
+    """Quantize + bit-plane pack: qw block is (bits, bn, bk/32) uint32,
+    plane p holding bit ``bits-1-p`` (MSB first) of every code — the codes
+    never leave VREGs between round and pack."""
+    w = w_ref[...].astype(jnp.float32)              # (bn, bk)
+    bn, bk = w.shape
+    q, scale, zero = _rtn_quantize_block(w, levels, group)
+    q = q.astype(jnp.uint32)
+    sel = jnp.arange(bits, dtype=jnp.uint32)[::-1]
+    planes = (q[None] >> sel[:, None, None]) & jnp.uint32(1)
+    planes = planes.reshape(bits, bn, bk // PLANE_PACK, PLANE_PACK)
+    shifts = jnp.arange(PLANE_PACK, dtype=jnp.uint32)
+    qw_ref[...] = jnp.sum(planes << shifts, axis=-1, dtype=jnp.uint32)
     scale_ref[...] = scale
     zero_ref[...] = zero
 
@@ -56,30 +81,57 @@ def rtn_pack_pallas(
     block_k: int | None = None,
     interpret: bool = False,
 ):
-    """Returns (qw uint32 (N, K/8), scale (N, G), zero (N, G)) — min/max RTN."""
+    """min/max RTN quantize + pack.  Returns (qw, scale (N, G), zero (N, G));
+    ``qw`` is uint32 (N, K/8) nibbles or (bits, N, K/32) bit-planes per
+    ``spec.layout``."""
     n, k = w.shape
     group = spec.group_size or k
     bk = block_k or min(max(group, 2048), k)
     bk = (bk // group) * group
-    if k % bk:
+    if k % bk or (spec.plane and bk % PLANE_PACK):
         bk = k
     bn = min(block_n, n)
     g_blk = bk // group
 
     grid = (pl.cdiv(n, bn), k // bk)
+    sz_specs = [
+        pl.BlockSpec((bn, g_blk), lambda i, kk: (i, kk)),
+        pl.BlockSpec((bn, g_blk), lambda i, kk: (i, kk)),
+    ]
+    sz_shapes = [
+        jax.ShapeDtypeStruct((n, k // group), jnp.float32),
+        jax.ShapeDtypeStruct((n, k // group), jnp.float32),
+    ]
+    if spec.plane:
+        bits = spec.bits
+        qw, scale, zero = pl.pallas_call(
+            functools.partial(_rtn_pack_planes_kernel, levels=spec.levels,
+                              group=group, bits=bits),
+            grid=grid,
+            in_specs=[pl.BlockSpec((bn, bk), lambda i, kk: (i, kk))],
+            out_specs=[
+                pl.BlockSpec((bits, bn, bk // PLANE_PACK),
+                             lambda i, kk: (0, i, kk)),
+                *sz_specs,
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((bits, n, k // PLANE_PACK), jnp.uint32),
+                *sz_shapes,
+            ],
+            interpret=interpret,
+        )(w)
+        return qw, scale, zero
     qw, scale, zero = pl.pallas_call(
         functools.partial(_rtn_pack_kernel, levels=spec.levels, group=group),
         grid=grid,
         in_specs=[pl.BlockSpec((bn, bk), lambda i, kk: (i, kk))],
         out_specs=[
             pl.BlockSpec((bn, bk // PACK), lambda i, kk: (i, kk)),
-            pl.BlockSpec((bn, g_blk), lambda i, kk: (i, kk)),
-            pl.BlockSpec((bn, g_blk), lambda i, kk: (i, kk)),
+            *sz_specs,
         ],
         out_shape=[
             jax.ShapeDtypeStruct((n, k // PACK), jnp.uint32),
-            jax.ShapeDtypeStruct((n, k // group), jnp.float32),
-            jax.ShapeDtypeStruct((n, k // group), jnp.float32),
+            *sz_shapes,
         ],
         interpret=interpret,
     )(w)

@@ -346,8 +346,18 @@ def analyze(hlo: str, entry: str | None = None) -> dict:
             if kind in _SKIP_KINDS:
                 continue
             acc["hbm_bytes_raw"] += _op_bytes(op, comp)
-            if kind not in _ELEMENTWISE:
-                acc["hbm_bytes"] += _op_bytes(op, comp, fused=True)
+            if kind in _ELEMENTWISE:
+                continue
+            if kind in ("fusion", "call") and op.callees \
+                    and _elementwise_only(op.callees[0]):
+                # elementwise-only shell (dequant chain, mask piece): on
+                # TPU it fuses INTO its consumer — the consumer charges
+                # its true inputs via _streamed_bytes and the shell's
+                # output write never exists.  Billing the shell here too
+                # double-counted every dequant chain in the fused model
+                # (raw model above keeps it, mirroring the CPU backend).
+                continue
+            acc["hbm_bytes"] += _op_bytes(op, comp, fused=True)
         return acc
 
     total = visit(entry)

@@ -29,6 +29,13 @@ idles a single slot-step on task drain, so CI can run it as a smoke gate:
 
     REPRO_FAKE_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
         --mesh 2,4 --continuous
+
+``--scheduler speculative`` (requires ``--layout plane``) self-speculates:
+each round drafts ``--spec-k`` tokens through the ``--draft-bits`` bit-plane
+prefix of the SAME weight buffer and verifies them in one target step.  The
+launcher then replays the identical stream through the greedy scheduler and
+exits non-zero on any token mismatch — the speculative path must be
+token-for-token exact, just faster.
 """
 from __future__ import annotations
 
@@ -40,6 +47,7 @@ if os.environ.get("REPRO_FAKE_DEVICES"):
     backend.fake_host_devices(os.environ["REPRO_FAKE_DEVICES"])
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -102,7 +110,8 @@ def run_continuous(engine, cfg, args, tasks):
             n_requests=3 * args.batch, trace_path=args.trace or None,
             n_new=(max(2, args.n_new // 2), args.n_new, 2 * args.n_new))
         print(f"[serve] traffic: {meta}")
-    config = ServeConfig(n_slots=args.batch, scheduler=args.scheduler)
+    config = ServeConfig(n_slots=args.batch, scheduler=args.scheduler,
+                         spec_k=args.spec_k, draft_bits=args.draft_bits)
     rep, summary = driver.run(engine, reqs, config)
     dropped = [i for i, t in enumerate(rep.tokens) if t is None]
     for i, (r, m) in enumerate(zip(reqs, rep.requests)):
@@ -130,6 +139,25 @@ def run_continuous(engine, cfg, args, tasks):
         print(f"[serve] FAIL: resident scheduler idled "
               f"{rep.task_drain_idle_slot_steps} slot-steps on task drain")
         ok = False
+    if rep.scheduler == "speculative":
+        # replay the exact stream through the greedy scheduler: speculative
+        # decoding must be token-for-token identical (the draft only picks
+        # WHICH tokens get verified) and spend fewer target steps
+        greedy = engine.serve(
+            reqs, dataclasses.replace(config, scheduler="auto"))
+        if rep.tokens != greedy.tokens:
+            print("[serve] FAIL: speculative tokens diverge from greedy")
+            ok = False
+        elif rep.steps >= greedy.steps:
+            print(f"[serve] FAIL: speculative spent {rep.steps} target "
+                  f"steps vs greedy {greedy.steps}")
+            ok = False
+        else:
+            print(f"[serve] speculative == greedy over {greedy.decoded} "
+                  f"tokens: target steps {rep.steps} vs {greedy.steps} "
+                  f"({greedy.steps / rep.steps:.2f}x), "
+                  f"acceptance={rep.acceptance_rate:.2f} "
+                  f"draft_steps={rep.draft_steps}")
     print(f"[serve] continuous {'OK' if ok else 'FAILED'}")
     return ok
 
@@ -139,6 +167,11 @@ def main():
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--tiny", action="store_true", default=True)
     ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--layout", default="nibble", choices=("nibble", "plane"),
+                    help="code packing: 'nibble' is 8 codes/uint32; 'plane' "
+                         "stores b bit-planes so a lower-bit draft is a "
+                         "buffer-prefix read (required for --scheduler "
+                         "speculative)")
     ap.add_argument("--tasks", default="taskA,taskB")
     ap.add_argument("--tune-steps", type=int, default=100)
     ap.add_argument("--n-new", type=int, default=16)
@@ -169,20 +202,30 @@ def main():
     ap.add_argument("--trace", default="",
                     help="trace traffic: JSON trace file to replay")
     ap.add_argument("--scheduler", default="auto",
-                    choices=("auto", "resident", "drain"),
+                    choices=("auto", "resident", "drain", "speculative"),
                     help="mixed-task policy for --continuous: 'resident' "
                          "keeps stacked per-task scales device-resident "
                          "and decodes mixed-task slots drain-free via the "
                          "in-kernel row gather; 'drain' waits the pool "
                          "out before each scale swap; 'auto' picks "
-                         "resident when supported")
+                         "resident when supported; 'speculative' drafts "
+                         "--spec-k tokens from the --draft-bits bit-plane "
+                         "prefix and verifies them in one target step "
+                         "(token-identical to greedy; the launcher replays "
+                         "the stream greedily and fails on any mismatch)")
+    ap.add_argument("--spec-k", type=int, default=2,
+                    help="speculative: draft tokens proposed per round")
+    ap.add_argument("--draft-bits", type=int, default=None,
+                    help="speculative: draft plane-prefix width "
+                         "(default bits-1)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
     if args.tiny:
         cfg = configs.make_tiny(cfg)
     cfg = cfg.replace(tuning=TuningConfig(mode="peqa"),
-                      quant=QuantConfig(bits=args.bits, n_grid=4),
+                      quant=QuantConfig(bits=args.bits, n_grid=4,
+                                        layout=args.layout),
                       kv_cache_dtype="int8" if args.kv_int8 else "model")
     api = registry.build(cfg)
     rng = jax.random.PRNGKey(0)

@@ -89,10 +89,14 @@ def apply_train(p: dict, x: jax.Array, cfg: ModelConfig,
 
 
 def _rope_decode(q, k, pos, cfg: ModelConfig):
-    """RoPE for a one-token decode step; pos scalar or (B,) per-slot."""
+    """RoPE for a decode step of S ≥ 1 tokens starting at ``pos``; pos scalar
+    or (B,) per-slot (token s of row b is at absolute position pos[b] + s)."""
     freqs = rope_freqs(cfg)
-    rope = apply_rope_slots if jnp.ndim(pos) == 1 else apply_rope
-    return rope(q, pos, freqs), rope(k, pos, freqs)
+    if jnp.ndim(pos) == 1:
+        return (apply_rope_slots(q, pos, freqs),
+                apply_rope_slots(k, pos, freqs))
+    pos = pos + jnp.arange(q.shape[1])
+    return apply_rope(q, pos, freqs), apply_rope(k, pos, freqs)
 
 
 def _cache_write(buf, val, slot):
@@ -114,16 +118,20 @@ def _cache_write(buf, val, slot):
 
 def apply_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache_k: jax.Array,
                  cache_v: jax.Array, pos: jax.Array, slots=None):
-    """One-token decode: x (B, 1, d); cache (B, C, Hkv, D); pos scalar i32
-    or a (B,) per-slot position vector (continuous batching: every batch
-    row decodes at its own depth).
+    """Decode step of S ≥ 1 tokens: x (B, S, d); cache (B, C, Hkv, D); pos
+    scalar i32 or a (B,) per-slot position vector (continuous batching:
+    every batch row decodes at its own depth).  S > 1 is the speculative
+    verify step — row b's tokens land at positions pos[b]..pos[b]+S-1 and
+    the causal mask (key slot j visible iff j ≤ query position) keeps any
+    stale cache rows beyond the written range invisible.
 
     slots: optional (task_ids, stacked-scale subtree) — mixed-task decode
     reads per-slot scale rows in every quantized linear (linear.apply).
+    With S > 1 the caller passes task_ids already repeated per token.
 
-    Returns (out (B, 1, d_model), new_cache_k, new_cache_v).
+    Returns (out (B, S, d_model), new_cache_k, new_cache_v).
     """
-    b = x.shape[0]
+    b, s, _ = x.shape
     cap = cache_k.shape[1]
     q, k, v = _qkv(p, x, cfg, slots=slots)
     if cfg.use_rope:
@@ -134,7 +142,7 @@ def apply_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache_k: jax.Array,
     # visible = slots with index <= pos (ring: all written slots; dense: prefix)
     o = ops.attention(q, cache_k, cache_v, causal=True, offset=pos,
                       impl=cfg.attn_impl)
-    o = o.reshape(b, 1, cfg.n_heads * cfg.d_head)
+    o = o.reshape(b, s, cfg.n_heads * cfg.d_head)
     out = linear.apply(p["wo"], o, cfg.quant.spec(),
                        slots=linear.slot_entry(slots, "wo"))
     return out, cache_k, cache_v
@@ -157,10 +165,11 @@ def dequantize_kv(q: jax.Array, scale: jax.Array, dtype):
 
 def apply_decode_q8(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict,
                     pos: jax.Array, slots=None):
-    """One-token decode against an int8-quantized KV cache (§Perf knob
-    kv_cache_dtype='int8').  cache: {k, v: int8 (B,C,H,D); k_scale, v_scale:
-    f16 (B,C,H)}. pos scalar or (B,) per-slot. Returns (out, new_cache)."""
-    b = x.shape[0]
+    """Decode step (S ≥ 1 tokens) against an int8-quantized KV cache (§Perf
+    knob kv_cache_dtype='int8').  cache: {k, v: int8 (B,C,H,D); k_scale,
+    v_scale: f16 (B,C,H)}. pos scalar or (B,) per-slot.
+    Returns (out, new_cache)."""
+    b, s, _ = x.shape
     cap = cache["k"].shape[1]
     q, k, v = _qkv(p, x, cfg, slots=slots)
     if cfg.use_rope:
@@ -175,20 +184,25 @@ def apply_decode_q8(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict,
     kf = dequantize_kv(cache["k"], cache["k_scale"], x.dtype)
     vf = dequantize_kv(cache["v"], cache["v_scale"], x.dtype)
     o = ops.attention(q, kf, vf, causal=True, offset=pos, impl=cfg.attn_impl)
-    o = o.reshape(b, 1, cfg.n_heads * cfg.d_head)
+    o = o.reshape(b, s, cfg.n_heads * cfg.d_head)
     out = linear.apply(p["wo"], o, cfg.quant.spec(),
                        slots=linear.slot_entry(slots, "wo"))
     return out, cache
 
 
-def apply_prefill(p: dict, x: jax.Array, cfg: ModelConfig, cap: int):
+def apply_prefill(p: dict, x: jax.Array, cfg: ModelConfig, cap: int,
+                  slots=None):
     """Full-sequence causal attention that also emits the decode cache.
+
+    slots: optional (task_ids, stacked-scale subtree) — a resident-stack
+    prefill reads per-row scales in every quantized linear exactly like the
+    slotted decode step (task_ids already repeated per token, B·S rows).
 
     Returns (out (B,S,d_model), ck (B,cap,Hkv,D), cv) with cache in ring
     layout (slot of token t = t % cap; a no-op roll when cap == S).
     """
     b, s, _ = x.shape
-    q, k, v = _qkv(p, x, cfg)
+    q, k, v = _qkv(p, x, cfg, slots=slots)
     if cfg.use_rope:
         freqs = rope_freqs(cfg)
         pos = jnp.arange(s)
@@ -196,7 +210,8 @@ def apply_prefill(p: dict, x: jax.Array, cfg: ModelConfig, cap: int):
         k = apply_rope(k, pos, freqs)
     o = ops.attention(q, k, v, causal=True, window=cfg.swa_window)
     o = o.reshape(b, s, cfg.n_heads * cfg.d_head)
-    out = linear.apply(p["wo"], o, cfg.quant.spec())
+    out = linear.apply(p["wo"], o, cfg.quant.spec(),
+                       slots=linear.slot_entry(slots, "wo"))
     ck = jnp.roll(k[:, s - cap:], s % cap, axis=1).astype(x.dtype)
     cv = jnp.roll(v[:, s - cap:], s % cap, axis=1).astype(x.dtype)
     return out, ck, cv

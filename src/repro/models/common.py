@@ -57,17 +57,20 @@ def apply_rope(x: jax.Array, positions: jax.Array, freqs: jax.Array) -> jax.Arra
 
 def apply_rope_slots(x: jax.Array, positions: jax.Array,
                      freqs: jax.Array) -> jax.Array:
-    """Per-slot RoPE for continuous decode: x (B, 1, H, D), positions (B,).
+    """Per-slot RoPE for continuous decode: x (B, S, H, D), positions (B,).
 
     Each batch row sits at its OWN absolute position (the slot-pool decode
     step of ``train/serve.py`` — sequences admitted at different times are
     at different depths).  ``apply_rope`` cannot express this: its
     ``positions`` index the sequence dim, shared across the batch.
+    Token s of row b is at absolute position ``positions[b] + s`` (S > 1 is
+    the speculative verify step: k+1 consecutive tokens per slot).
     """
     pos = jnp.asarray(positions, jnp.float32)
-    ang = pos[:, None] * freqs[None, :]                # (B, D/2)
-    cos = jnp.cos(ang)[:, None, None, :]
-    sin = jnp.sin(ang)[:, None, None, :]
+    pos = pos[:, None] + jnp.arange(x.shape[1], dtype=jnp.float32)[None, :]
+    ang = pos[..., None] * freqs                       # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
     return out.astype(x.dtype)

@@ -40,6 +40,16 @@ class ModelAPI:
     # mixed-task decode against (T, …)-stacked scales; None for families that
     # cannot thread per-slot scales (MoE's shard_map'd experts, SSM, encdec)
     decode_step_slotted: Optional[Callable] = None
+    # (params, task_stack, batch, task_ids) -> (last_logits, cache): prefill
+    # reading per-row scales from the resident stack (no live-scale swap at
+    # admit); gated exactly like decode_step_slotted
+    prefill_slotted: Optional[Callable] = None
+    # (params, cache, tokens (B, S), pos (B,)) -> (logits (B, S, V), cache):
+    # score S tokens in one pass for speculative verify; None for families
+    # without a multi-token KV-cache decode path (SSM, hybrid, encdec)
+    decode_verify: Optional[Callable] = None
+    # slotted variant (+ task_stack, task_ids); gated like decode_step_slotted
+    decode_verify_slotted: Optional[Callable] = None
 
     def input_specs(self, shape: ShapeConfig) -> dict:
         return input_specs(self.cfg, shape)
@@ -94,6 +104,17 @@ def build(cfg: ModelConfig) -> ModelAPI:
             init_cache=lambda b, s: attention.init_cache(cfg, b, s),
             decode_step_slotted=None if cfg.moe is not None else _scoped(
                 cfg, lambda p, st, c, t, pos, tid: transformer.decode_step(
+                    p, c, t, pos, cfg, task_stack=st, task_ids=tid)),
+            prefill_slotted=None if cfg.moe is not None else _scoped(
+                cfg, lambda p, st, b, tid: transformer.prefill(
+                    p, b["tokens"], cfg,
+                    prefix_embeds=b.get("image_embeds"),
+                    task_stack=st, task_ids=tid)),
+            decode_verify=_scoped(
+                cfg, lambda p, c, t, pos: transformer.decode_verify(
+                    p, c, t, pos, cfg)),
+            decode_verify_slotted=None if cfg.moe is not None else _scoped(
+                cfg, lambda p, st, c, t, pos, tid: transformer.decode_verify(
                     p, c, t, pos, cfg, task_stack=st, task_ids=tid)),
         )
     if fam == "hybrid":

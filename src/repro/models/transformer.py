@@ -115,8 +115,15 @@ def loss_fn(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
 
 
 def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
-            prefix_embeds: Optional[jax.Array] = None):
+            prefix_embeds: Optional[jax.Array] = None,
+            task_stack: dict | None = None,
+            task_ids: jax.Array | None = None):
     """Prefill: forward over the prompt, building the KV cache.
+
+    task_stack/task_ids: same contract as ``_decode_tokens`` — the prompt's
+    quantized linears read each batch row's scales from the resident stack
+    instead of the live tree, so admitting a request for a resident task
+    needs NO host→device scale swap (``task_ids: (B,) int32`` stack rows).
 
     Returns (last_logits (B, V), cache).
     """
@@ -127,31 +134,51 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
     positions = jnp.arange(s)
     cap = attention.cache_capacity(cfg, s)
     h = dctx.constrain_tokens(h, cfg.seq_shard)
+    slotted = task_stack is not None
+    # quantized linears flatten (B, S, d) to B·S rows: one id per token
+    tok_ids = jnp.repeat(task_ids, s) if slotted else None
 
-    def body(h, layer_p):
+    def body(h, xs):
+        if slotted:
+            layer_p, layer_stack = xs
+            slots = (tok_ids, layer_stack)
+        else:
+            layer_p = xs
+            slots = None
         hin = common.norm_apply(layer_p["ln1"], h, cfg)
-        a, ck, cv = attention.apply_prefill(layer_p["attn"], hin, cfg, cap)
+        a, ck, cv = attention.apply_prefill(
+            layer_p["attn"], hin, cfg, cap,
+            slots=linear.slot_entry(slots, "attn"))
         h = h + a
         hin = common.norm_apply(layer_p["ln2"], h, cfg)
         if "moe" in layer_p:
             m, _ = moe.apply(layer_p["moe"], hin, cfg)
         else:
-            m = common.mlp_apply(layer_p["mlp"], hin, cfg)
+            m = common.mlp_apply(layer_p["mlp"], hin, cfg,
+                                 slots=linear.slot_entry(slots, "mlp"))
         h = dctx.constrain_tokens(h + m, cfg.seq_shard)
         return h, attention.prefill_cache_entry(ck, cv, cfg)
 
     if cfg.remat in ("block", "full"):
         body = jax.checkpoint(body, prevent_cse=False)
-    h, cache = jax.lax.scan(body, h, params["layers"])
+    xs = (params["layers"], task_stack["layers"]) if slotted \
+        else params["layers"]
+    h, cache = jax.lax.scan(body, h, xs)
     h = common.norm_apply(params["final_norm"], h, cfg)
-    logits = common.head_apply(params, params["embed"], h[:, -1:], cfg)
+    # the head sees only the last token: one row per batch element
+    head_slots = linear.slot_entry((task_ids, task_stack), "lm_head") \
+        if slotted else None
+    logits = common.head_apply(params, params["embed"], h[:, -1:], cfg,
+                               slots=head_slots)
     return logits[:, 0], cache
 
 
-def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
-                cfg: ModelConfig, task_stack: dict | None = None,
-                task_ids: jax.Array | None = None):
-    """One decode step. tokens (B, 1); pos scalar int32 (next position).
+def _decode_tokens(params: dict, cache: dict, tokens: jax.Array,
+                   pos: jax.Array, cfg: ModelConfig,
+                   task_stack: dict | None = None,
+                   task_ids: jax.Array | None = None):
+    """Shared decode body: tokens (B, S) at positions pos..pos+S-1 (per-slot
+    when pos is (B,)).  Returns (logits (B, S, V) f32, new_cache).
 
     task_stack/task_ids (mixed-task continuous decode): ``task_stack``
     mirrors the params tree pruned to its scale/zero leaves with a task dim
@@ -160,13 +187,15 @@ def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
     quantized linears gather per-slot scales in-kernel instead of the pool
     draining for a scale swap.  MoE blocks are not supported slotted (their
     shard_map'd expert dispatch runs the autodiff impl); registry gates this.
-
-    Returns (logits (B, V) f32, new_cache).
     """
     h = common.embed_apply(params["embed"], tokens, cfg)
 
     q8 = cfg.kv_cache_dtype == "int8"
     slotted = task_stack is not None
+    if slotted and tokens.shape[1] > 1:
+        # quantized linears flatten (B, S, d) row-major to M = B·S rows —
+        # repeat each slot's task id per token to match
+        task_ids = jnp.repeat(task_ids, tokens.shape[1])
 
     def body(h, xs):
         if slotted:
@@ -203,4 +232,35 @@ def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
         if slotted else None
     logits = common.head_apply(params, params["embed"], h, cfg,
                                slots=head_slots)
+    return logits, new_cache
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
+                cfg: ModelConfig, task_stack: dict | None = None,
+                task_ids: jax.Array | None = None):
+    """One decode step. tokens (B, 1); pos scalar int32 (next position) or
+    (B,) per-slot.  Returns (logits (B, V) f32, new_cache).
+    See ``_decode_tokens`` for the task_stack/task_ids slotted contract."""
+    logits, new_cache = _decode_tokens(params, cache, tokens, pos, cfg,
+                                       task_stack, task_ids)
     return logits[:, 0], new_cache
+
+
+def decode_verify(params: dict, cache: dict, tokens: jax.Array,
+                  pos: jax.Array, cfg: ModelConfig,
+                  task_stack: dict | None = None,
+                  task_ids: jax.Array | None = None):
+    """Speculative verify: score S = k+1 tokens in ONE target pass.
+
+    tokens (B, S) = [next-input, draft_1..draft_k]; row b's token s sits at
+    absolute position pos[b] + s, writing cache rows pos[b]..pos[b]+S-1
+    (the draft's provisional rows are overwritten with target K/V).  Row s
+    of the returned logits is the target's next-token distribution AFTER
+    consuming tokens[:, :s+1] — greedy-argmax it against draft_{s+1} to find
+    the longest accepted prefix.  Stale cache rows beyond the accepted
+    prefix are never visible: the causal mask keys on absolute position.
+
+    Returns (logits (B, S, V) f32, new_cache).
+    """
+    return _decode_tokens(params, cache, tokens, pos, cfg, task_stack,
+                          task_ids)

@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-SCHEDULERS = ("auto", "resident", "drain")
+SCHEDULERS = ("auto", "resident", "drain", "speculative")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,7 +25,18 @@ class ServeConfig:
         longest request (prompt + budget).
 
     Mixed-task policy (``scheduler``): ``"drain"`` | ``"resident"`` |
-    ``"auto"`` — semantics in ``Engine.serve``'s docstring.
+    ``"auto"`` | ``"speculative"`` — semantics in ``Engine.serve``'s
+    docstring.  ``"speculative"`` decodes each pool step as a
+    self-speculative round: ``spec_k`` draft tokens from the
+    ``draft_bits``-bit prefix of the bit-plane-packed backbone (same
+    weights, fewer planes), then ONE multi-token target verify; tasked
+    traffic runs resident (drain otherwise), exactly like ``"auto"``.
+
+    Speculative knobs (used only by ``scheduler="speculative"``):
+      * ``spec_k`` — draft tokens proposed per verify step (≥ 1).
+      * ``draft_bits`` — how many bit-planes the draft reads; ``None`` =
+        target bits − 1.  Must be < the backbone's quant bits, and the
+        backbone must use ``QuantConfig(layout="plane")``.
 
     Admission control (overload degrades gracefully instead of queueing
     unboundedly — every outcome is accounted in ``ServeReport``):
@@ -53,6 +64,8 @@ class ServeConfig:
     shed_after_s: Optional[float] = None
     step_s: float = 1.0
     prefill_s: Optional[float] = None
+    spec_k: int = 2
+    draft_bits: Optional[int] = None
 
     def __post_init__(self):
         if self.n_slots < 1:
@@ -74,6 +87,11 @@ class ServeConfig:
             raise ValueError(f"step_s={self.step_s} must be > 0")
         if self.prefill_s is not None and self.prefill_s < 0:
             raise ValueError(f"prefill_s={self.prefill_s} must be >= 0")
+        if self.spec_k < 1:
+            raise ValueError(f"spec_k={self.spec_k} must be >= 1")
+        if self.draft_bits is not None and self.draft_bits < 1:
+            raise ValueError(
+                f"draft_bits={self.draft_bits} must be >= 1")
 
     @property
     def admit_cost_s(self) -> float:

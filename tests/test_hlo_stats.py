@@ -68,6 +68,48 @@ def test_dus_counts_update_not_buffer():
     assert a["hbm_bytes"] < BIG * 4 / 4
 
 
+# hand-authored module with exact ground truth: an elementwise-only fusion
+# shell (int8 dequant chain) feeding a dot — the TPU backend fuses the shell
+# into the dot, so the fused byte model must charge the chain's SOURCES once
+# (at the dot) and never the shell's own output write
+_SHELL_HLO = """
+HloModule m
+
+%dequant (p0: s8[4096,512], p1: f32[1,512]) -> f32[4096,512] {
+  %p0 = s8[4096,512] parameter(0)
+  %p1 = f32[1,512] parameter(1)
+  %c = f32[4096,512] convert(%p0)
+  %b = f32[4096,512] broadcast(%p1), dimensions={0,1}
+  ROOT %m = f32[4096,512] multiply(%c, %b)
+}
+
+ENTRY %main (x: f32[8,4096], w8: s8[4096,512], s: f32[1,512]) -> f32[8,512] {
+  %x = f32[8,4096] parameter(0)
+  %w8 = s8[4096,512] parameter(1)
+  %s = f32[1,512] parameter(2)
+  %w = f32[4096,512] fusion(%w8, %s), kind=kLoop, calls=%dequant
+  ROOT %dot = f32[8,512] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_fused_model_skips_elementwise_shell():
+    """Regression: the fused model once billed the dequant shell TWICE —
+    its inputs streamed into the dot via the chain resolution AND the
+    shell's own output write + operand reads at top level.  The fused
+    bytes must be exactly the dot's fused traffic."""
+    a = analyze(_SHELL_HLO)
+    dot_out = 8 * 512 * 4
+    x_bytes = 8 * 4096 * 4
+    chain_src = 4096 * 512 * 1 + 512 * 4        # int8 codes + scale row
+    assert a["hbm_bytes"] == dot_out + x_bytes + chain_src
+    # the raw model (CPU-backend view) keeps the materialised shell
+    shell = 4096 * 512 * 4 + chain_src
+    dot_raw = dot_out + x_bytes + 4096 * 512 * 4
+    assert a["hbm_bytes_raw"] == shell + dot_raw
+    assert a["dot_flops"] == 2 * 8 * 512 * 4096
+
+
 def test_streamed_dtype_resolves_dequant_chain():
     """A dot fed by int8→f32 convert streams int8 bytes, not f32."""
     K, N = 4096, 512

@@ -99,6 +99,21 @@ def test_lru_small_stack_still_exact(setup, drain_report):
     assert all(t is not None for t in rep4.tokens)
 
 
+def test_resident_prefill_reads_stack_zero_swaps(setup, drain_report):
+    """Admission under resident is swap-free: prefill runs through the
+    ResidentStack row (``prefill_slotted``), so the live params are never
+    re-targeted at admit — ``switches == 0`` while drain pays one swap per
+    task run on the same traffic.  The only scale traffic left is the row
+    installs themselves, and tokens still match drain exactly."""
+    cfg = setup[0]
+    rep = _engine(setup).serve(
+        _requests(cfg), ServeConfig(n_slots=3, scheduler="resident"))
+    assert rep.switches == 0
+    assert rep.resident_installs == len(TASKS)
+    assert drain_report.switches > 0
+    assert rep.tokens == drain_report.tokens
+
+
 def test_auto_falls_back_to_drain_when_untasked(setup, drain_report):
     cfg = setup[0]
     reqs = _requests(cfg, n=3)

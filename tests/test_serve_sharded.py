@@ -199,7 +199,13 @@ _CONT_TEST = textwrap.dedent("""
     host.switch_task("A"); emesh.switch_task("A")
     rep_m = emesh.serve(reqs, ServeConfig(n_slots=4))
     assert rep_m.bubble_slot_steps == 0
-    assert rep_m.switches == rep_h.switches == 1      # drain, swap once
+    # auto -> resident: prefill reads the stack row, so admission is
+    # swap-free (zero switches); the drain path still swaps per task run
+    assert rep_m.scheduler == rep_h.scheduler == "resident"
+    assert rep_m.switches == rep_h.switches == 0
+    rep_d = emesh.serve(reqs, ServeConfig(n_slots=4, scheduler="drain"))
+    assert rep_d.switches >= 1
+    assert rep_d.tokens == rep_m.tokens
     for i in range(len(reqs)):
         assert rep_h.tokens[i] == rep_m.tokens[i], i
     for i, r in enumerate(reqs):                       # lockstep oracle
@@ -231,6 +237,60 @@ _CONT_TEST = textwrap.dedent("""
     assert ag_b >= 1, "replicated continuous baseline should gather logits"
     print("SUBPROC_CONT_OK")
 """)
+
+
+_SAMPLE_TEST = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.dist import context as dctx, sampling
+
+    key = jax.random.PRNGKey(42)
+    B, V = 8, 64
+    lg = jax.random.normal(jax.random.PRNGKey(1), (B, V)) * 3.0
+
+    # off-mesh reference stream
+    dense = sampling.shard_sample(None, B, 0.8)
+    want = np.asarray(dense(lg, key))
+
+    # the SAME (key, row, vocab-id)-keyed noise field under two mesh
+    # shapes: tokens must be bit-identical (reshard invariance)
+    for shape in ((2, 4), (1, 8)):
+        mesh = jax.make_mesh(shape, ("data", "model"))
+        ctx = dctx.make_ctx(mesh)
+        fn = jax.jit(sampling.shard_sample(ctx, B, 0.8))
+        got = np.asarray(fn(jax.device_put(lg, ctx.logits_sharding(B)), key))
+        assert (got == want).all(), (shape, got, want)
+
+    # temperature <= 0 degrades to the greedy shard_argmax
+    g = sampling.shard_sample(None, B, 0.0)
+    assert (np.asarray(g(lg, key))
+            == np.asarray(jnp.argmax(lg, axis=-1))).all()
+
+    # different keys give different samples (it IS sampling)
+    k2 = jax.random.PRNGKey(43)
+    assert (np.asarray(dense(lg, k2)) != want).any()
+
+    # empirical frequency tracks softmax(logits/T): total variation small
+    row = lg[:1]
+    keys = jax.random.split(jax.random.PRNGKey(7), 2000)
+    samp = jax.jit(jax.vmap(lambda k: dense(row, k)[0]))(keys)
+    counts = np.bincount(np.asarray(samp), minlength=V) / 2000.0
+    pref = np.asarray(jax.nn.softmax(row[0] / 0.8))
+    tv = 0.5 * np.abs(counts - pref).sum()
+    assert tv < 0.08, tv
+    print("SUBPROC_SAMPLE_OK")
+""")
+
+
+def test_shard_sample_reshard_invariant_subprocess():
+    """Gumbel-max temperature sampling: bit-identical token streams across
+    mesh shapes and off-mesh (noise keyed on global coordinates), greedy
+    degrade, and the empirical distribution matches softmax(logits/T)."""
+    res = subprocess.run([sys.executable, "-c", _SAMPLE_TEST],
+                         capture_output=True, text=True, timeout=900,
+                         env=subproc_env())
+    assert "SUBPROC_SAMPLE_OK" in res.stdout, res.stderr[-3000:]
 
 
 def test_continuous_serving_subprocess():

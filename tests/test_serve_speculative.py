@@ -1,0 +1,195 @@
+"""Self-speculative serving: draft from the bit-plane prefix, verify once.
+
+The acceptance contract (ISSUE: self-speculative decoding from a
+shared-weight low-bit draft):
+
+  * token-for-token equality with plain greedy — the draft only picks
+    WHICH tokens get verified; every emitted token is the target's argmax
+    on the exact greedy prefix (``Engine._spec_round_fn``'s accept rule);
+  * fewer TARGET steps than greedy on the same traffic (``report.steps``
+    counts one verify per round; ``report.draft_steps`` meters the draft);
+  * rollback safety: cache rows past each slot's committed position are
+    dead state — poisoning them with NaN must not change a single token;
+  * composes with the resident scheduler (mixed-task stacks) and with
+    mid-loop evict/admit (staggered lengths), like every other scheduler;
+  * honest failure: requesting speculative on a nibble backbone (no plane
+    prefix to read) or with draft_bits >= bits raises, never degrades.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.configs.base import QuantConfig, TuningConfig
+from repro.core import policies
+from repro.core import scale_bank as sb
+from repro.models import registry
+from repro.serve import ServeConfig
+from repro.train.serve import Engine, Request
+
+TASKS = ("t0", "t1", "t2")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.paper_lm(n_layers=2, d_model=64, n_heads=2, d_ff=96,
+                           vocab=128).replace(
+        tuning=TuningConfig(mode="peqa"),
+        quant=QuantConfig(bits=4, n_grid=2, layout="plane"))
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p, _ = policies.prepare(api.init(rng), cfg, rng)
+    p = jax.tree.map(np.asarray, p)
+    bank = sb.ScaleBank()
+    bank.add(TASKS[0], p)
+    rngs = np.random.default_rng(7)
+    for t in TASKS[1:]:
+        bank.tasks[t] = {k: (v * rngs.uniform(0.8, 1.2, v.shape)
+                             ).astype(v.dtype)
+                         for k, v in bank.tasks[TASKS[0]].items()}
+    return cfg, api, p, bank
+
+
+def _engine(setup, with_bank=True):
+    cfg, api, p, bank = setup
+    return Engine(api, jax.tree.map(jnp.asarray, p),
+                  bank=bank if with_bank else None)
+
+
+def _requests(cfg, tasked, n=9):
+    # staggered budgets force mid-loop evict + re-admit under both paths
+    return [Request(
+        tokens=(np.arange(4, dtype=np.int32) * (i + 1)) % cfg.vocab_size,
+        n_new=(4, 6, 8)[i % 3],
+        task=TASKS[i % 3] if tasked else None) for i in range(n)]
+
+
+def test_speculative_equals_greedy_untasked(setup):
+    cfg = setup[0]
+    greedy = _engine(setup, with_bank=False).serve(
+        _requests(cfg, False), ServeConfig(n_slots=3, scheduler="auto"))
+    spec = _engine(setup, with_bank=False).serve(
+        _requests(cfg, False),
+        ServeConfig(n_slots=3, scheduler="speculative", spec_k=2))
+    assert spec.scheduler == "speculative"
+    assert spec.tokens == greedy.tokens            # token-for-token
+    assert all(t is not None for t in spec.tokens)
+    assert spec.steps < greedy.steps               # fewer TARGET steps
+    assert spec.draft_steps > 0
+    assert spec.draft_proposed > 0
+    assert spec.acceptance_rate is not None
+    assert greedy.draft_steps == 0 and greedy.acceptance_rate is None
+
+
+def test_speculative_composes_with_resident(setup):
+    cfg = setup[0]
+    greedy = _engine(setup).serve(
+        _requests(cfg, True), ServeConfig(n_slots=3, scheduler="auto"))
+    spec = _engine(setup).serve(
+        _requests(cfg, True),
+        ServeConfig(n_slots=3, scheduler="speculative", spec_k=3))
+    assert greedy.scheduler == "resident"
+    assert spec.scheduler == "speculative"
+    assert spec.tokens == greedy.tokens
+    assert spec.task_drain_idle_slot_steps == 0    # resident underneath
+    assert spec.steps < greedy.steps
+    # per-request acceptance metering: every served request proposed drafts
+    for m in spec.requests:
+        assert m.draft_proposed > 0
+        assert m.acceptance_rate is not None
+        assert 0.0 <= m.acceptance_rate <= 1.0
+    assert spec.draft_accepted <= spec.draft_proposed
+
+
+def test_speculative_draft_bits_choices(setup):
+    """Any draft prefix width 1..bits-1 stays token-identical to greedy."""
+    cfg = setup[0]
+    greedy = _engine(setup, with_bank=False).serve(
+        _requests(cfg, False, n=4), ServeConfig(n_slots=2, scheduler="auto"))
+    for db in (1, 2, 3):
+        spec = _engine(setup, with_bank=False).serve(
+            _requests(cfg, False, n=4),
+            ServeConfig(n_slots=2, scheduler="speculative", spec_k=2,
+                        draft_bits=db))
+        assert spec.tokens == greedy.tokens, f"draft_bits={db}"
+
+
+def test_rollback_poison_stale_rows_never_read(setup):
+    """Rows past each slot's committed position are provably dead: fill
+    them with a huge sentinel after a speculative round and the remaining
+    greedy decode must not change a single token (every row is rewritten
+    before the causal mask lets any query see it — a leaked row would
+    dominate the softmax and flip the argmax).  The sentinel is finite
+    because masked attention multiplies dead rows by an exact 0, which
+    annihilates any finite poison but would propagate NaN."""
+    cfg = setup[0]
+    eng = _engine(setup, with_bank=False)
+    reqs = _requests(cfg, False, n=2)
+    cache_len = max(r.n_prompt + int(r.n_new) for r in reqs) + 2
+    pool = eng.open_pool(2, cache_len)
+    for i, r in enumerate(reqs):
+        eng.admit(pool, r, rid=i)
+    eng.spec_step(pool, 2, 3)          # leaves rejected draft rows behind
+    # clone the pool state, poison rows >= pos[slot] in the copy
+    import copy
+    poisoned = eng.open_pool(2, cache_len)
+    poisoned.pos = pool.pos.copy()
+    poisoned.active = pool.active.copy()
+    poisoned.tok = pool.tok.copy()
+    poisoned.tid = pool.tid.copy()
+    poisoned.meta = copy.deepcopy(pool.meta)
+    sdims = eng._cache_dims()[1]
+    bdims = eng._cache_dims()[0]
+
+    def poison(leaf, sd, bd):
+        if sd < 0 or bd < 0 or not np.issubdtype(
+                np.asarray(leaf).dtype, np.floating):
+            return leaf
+        a = np.array(leaf)
+        for slot in range(2):
+            idx = [slice(None)] * a.ndim
+            idx[bd] = slot
+            idx[sd] = slice(int(pool.pos[slot]), None)
+            a[tuple(idx)] = 1e4
+        return jnp.asarray(a)
+
+    poisoned.cache = jax.tree.map(poison, pool.cache, sdims, bdims)
+    clean_toks, poisoned_toks = [], []
+    for _ in range(4):
+        clean_toks.append(eng.step(pool).tolist())
+        poisoned_toks.append(eng.step(poisoned).tolist())
+    assert clean_toks == poisoned_toks
+
+
+def test_speculative_requires_plane_backbone(setup):
+    cfg, api, p, _ = setup
+    nib = cfg.replace(quant=QuantConfig(bits=4, n_grid=2, layout="nibble"))
+    napi = registry.build(nib)
+    np_, _ = policies.prepare(napi.init(jax.random.PRNGKey(0)), nib,
+                              jax.random.PRNGKey(0))
+    eng = Engine(napi, np_)
+    with pytest.raises(ValueError, match="plane"):
+        eng.serve(_requests(cfg, False, n=2),
+                  ServeConfig(n_slots=2, scheduler="speculative"))
+
+
+def test_speculative_draft_bits_validation(setup):
+    cfg = setup[0]
+    eng = _engine(setup, with_bank=False)
+    with pytest.raises(ValueError, match="draft_bits"):
+        eng.serve(_requests(cfg, False, n=2),
+                  ServeConfig(n_slots=2, scheduler="speculative",
+                              draft_bits=4))   # == backbone bits: no prefix
+
+
+def test_speculative_respects_budget_and_slo_rows(setup):
+    """Budget capping: a round proposing past n_new emits exactly n_new
+    tokens; the SLO rows carry speculative counters for served requests."""
+    cfg = setup[0]
+    reqs = [Request(tokens=np.arange(4, dtype=np.int32), n_new=3)]
+    rep = _engine(setup, with_bank=False).serve(
+        reqs, ServeConfig(n_slots=2, scheduler="speculative", spec_k=4))
+    assert rep.n_served == 1
+    assert len(rep.requests[0].tokens) == 3
+    assert rep.requests[0].draft_proposed % 4 == 0
