@@ -34,6 +34,13 @@
     and ≥ 1.2× fewer decode steps — all deterministic counters, so a
     noisy runner cannot flake the build.  Wall-clock tokens/s is
     reported unguarded.
+  * Sharded speculative: the same draft/verify loop through the mesh
+    (logitshard sampling, per-shard scale layout) — token equality with
+    greedy and the ≥ 1.3× target-step ratio must survive sharding.
+  * Family serving: one tiny arch per served family (dense, encdec, vlm,
+    ssm, hybrid) through the SAME continuous-batching slot pool — gates
+    token-for-token equality with lockstep and zero bubble slot-steps
+    per family (the slot-state protocol matrix, docs/SERVING.md).
   * Production serving: seeded Poisson / trace-replay traffic through the
     event-driven admission loop (``repro.serve``), both schedulers, with
     per-request SLO percentiles (TTFT/TPOT/queue-wait/e2e on the virtual
@@ -730,6 +737,167 @@ def speculative_serving(report, check: bool = False) -> bool:
     return ok
 
 
+def sharded_speculative(report, check: bool = False) -> bool:
+    """Speculative decode ON THE MESH: the bit-plane draft + multi-token
+    verify run under logitshard sampling on fake devices.
+
+    Same deterministic gates as the off-mesh speculative bench —
+    token-for-token equality with greedy and ≥ 1.3× fewer target steps —
+    but through the sharded decode path, so a draft/verify step that only
+    works replicated (e.g. one that regathers the vocab or breaks the
+    per-shard scale layout) fails here.  Model axis is 2: the tiny plane
+    config's scale-group extents (d_model/group = 2) bound the tensor
+    split.
+    """
+    from repro.dist import context as dctx
+    from repro.dist import sharding as shard_rules
+    from repro.serve import ServeConfig
+    from repro.train.serve import Engine, Request
+
+    n = jax.device_count()
+    if n < 2:
+        report("kernel/sharded_speculative", 0.0,
+               "skipped: 1 device (set XLA_FLAGS="
+               "--xla_force_host_platform_device_count=8)")
+        return not check
+    mesh = jax.make_mesh((n // 2, 2), ("data", "model"))
+    ctx = dctx.make_ctx(mesh)
+
+    # d_ff=128 (not the off-mesh bench's 96): every quant-group extent must
+    # divide the model axis, and 96/32 = 3 groups does not split in 2
+    cfg = configs.paper_lm(n_layers=1, d_model=64, n_heads=2, d_ff=128,
+                           vocab=128).replace(
+        tuning=TuningConfig(mode="peqa"),
+        quant=QuantConfig(bits=4, n_grid=2, layout="plane"))
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p, _ = policies.prepare(api.init(rng), cfg, rng)
+    p = jax.tree.map(np.asarray, p)
+    vocab = cfg.vocab_size
+    mk = lambda: Engine(
+        api, jax.device_put(p, shard_rules.named_shardings(ctx, p)),
+        ctx=ctx, logitshard=True)
+
+    reqs = [Request(tokens=(np.arange(6, dtype=np.int32) * (i + 1)) % vocab,
+                    n_new=(16, 24, 32)[i % 3]) for i in range(8)]
+    greedy = mk().serve(reqs, ServeConfig(n_slots=4, scheduler="auto"))
+    spec = mk().serve(reqs, ServeConfig(n_slots=4, scheduler="speculative",
+                                        spec_k=2, draft_bits=3))
+
+    ok = True
+    equal = all(a is not None and a == b
+                for a, b in zip(greedy.tokens, spec.tokens))
+    if not equal:
+        report("kernel/sharded_speculative", 0.0,
+               "FAIL sharded speculative tokens diverge from greedy")
+        ok = False
+    step_ratio = greedy.steps / max(spec.steps, 1)
+    if check and step_ratio < 1.3:
+        report("kernel/sharded_speculative", 0.0,
+               f"FAIL target-step ratio {step_ratio:.2f}x < 1.3x "
+               f"(greedy {greedy.steps} vs speculative {spec.steps})")
+        ok = False
+    acc = spec.acceptance_rate or 0.0
+    report("kernel/sharded_speculative", spec.wall_s * 1e6,
+           f"({n // 2}x2 mesh, logitshard) target_steps={spec.steps} vs "
+           f"{greedy.steps} ({step_ratio:.2f}x) "
+           f"draft_steps={spec.draft_steps} acceptance={acc:.2f} "
+           f"tokens==greedy: {equal}")
+    metric("serving/sharded_speculative_step_ratio", step_ratio,
+           "x_vs_greedy", guard=("higher", 0.15),
+           spec_steps=spec.steps, greedy_steps=greedy.steps,
+           draft_steps=spec.draft_steps, acceptance=round(acc, 6))
+    metric("serving/sharded_speculative_token_equality", int(equal), "bool",
+           guard=("higher", 0.0))
+    return ok
+
+
+# the continuous-batching smoke matrix: one arch per served family, each
+# with its slot-state protocol (dense KV pages, encdec cross-KV admitted
+# as position-free rows, vlm image prefix occupying decoder positions,
+# SSM/hybrid recurrent rows).  SSM/hybrid prompt lengths are multiples of
+# the tiny SSMConfig.chunk (chunked-SSD prefill constraint).
+FAMILY_ARCHS = ("llama3.2-1b", "whisper-medium", "llava-next-mistral-7b",
+                "xlstm-125m", "zamba2-7b")
+_KV_SHAPES = ((6, 4, 0), (5, 9, 0), (7, 3, 1), (6, 6, 2), (4, 12, 3))
+_CHUNKED_SHAPES = ((8, 4, 0), (16, 7, 0), (8, 3, 1), (24, 5, 3), (16, 6, 6))
+
+
+def _family_requests(cfg, rng: np.random.Generator):
+    """Mixed-length staggered workload for one family, prefixes included."""
+    from repro.train.serve import Request
+    shapes = _CHUNKED_SHAPES if cfg.family in ("ssm", "hybrid") \
+        else _KV_SHAPES
+    reqs = []
+    for s, n_new, arrival in shapes:
+        prefix = None
+        if cfg.family == "encdec":
+            prefix = rng.normal(size=(cfg.enc_frames, cfg.d_model)
+                                ).astype(np.float32)
+        elif cfg.family == "vlm":
+            prefix = rng.normal(size=(cfg.n_img_tokens, cfg.d_model)
+                                ).astype(np.float32)
+        reqs.append(Request(
+            tokens=rng.integers(0, cfg.vocab_size, size=s).astype(np.int32),
+            n_new=n_new, arrival_step=arrival, prefix=prefix))
+    return reqs
+
+
+def family_serving(report, check: bool = False) -> bool:
+    """Continuous batching across every served family vs lockstep.
+
+    One tiny arch per family through the SAME slot pool code path: 5
+    mixed-length staggered requests over 2 slots, gated on token-for-token
+    equality with per-request lockstep ``generate`` and zero bubble
+    slot-steps.  Both counters are deterministic, so the per-family rows
+    feed the perf-trajectory gate at band 0.
+    """
+    from repro.serve import ServeConfig
+    from repro.train.serve import Engine
+
+    ok = True
+    for arch in FAMILY_ARCHS:
+        cfg = configs.make_tiny(configs.get_config(arch)).replace(
+            tuning=TuningConfig(mode="peqa"),
+            quant=QuantConfig(bits=4, n_grid=2))
+        fam = cfg.family
+        api = registry.build(cfg)
+        rng = jax.random.PRNGKey(0)
+        p, _ = policies.prepare(api.init(rng), cfg, rng)
+        eng = Engine(api, jax.tree.map(jnp.asarray, p))
+        reqs = _family_requests(cfg, np.random.default_rng(11))
+        rep = eng.serve(reqs, ServeConfig(n_slots=2))
+
+        equal = True
+        for i, r in enumerate(reqs):
+            pref = None if r.prefix is None else jnp.asarray(r.prefix)[None]
+            ref = np.asarray(eng.generate(jnp.asarray(r.tokens)[None],
+                                          n_new=r.n_new, prefix=pref))
+            want = list(ref[0, len(r.tokens):])
+            if rep.tokens[i] != want:
+                report(f"kernel/family_{fam}", 0.0,
+                       f"FAIL {arch} req{i}: continuous diverges from "
+                       f"lockstep")
+                equal = ok = False
+                break
+        if rep.bubble_slot_steps != 0:
+            report(f"kernel/family_{fam}", 0.0,
+                   f"FAIL {arch}: {rep.bubble_slot_steps} bubble slot-steps")
+            ok = False
+        report(f"kernel/family_{fam}", rep.wall_s * 1e6,
+               f"{arch}: {len(reqs)} reqs / 2 slots steps={rep.steps} "
+               f"bubbles={rep.bubble_slot_steps} "
+               f"prefill_compiles={rep.prefill_compiles} "
+               f"tokens==lockstep: {equal}")
+        metric(f"serving/family_{fam}_token_equality", int(equal), "bool",
+               guard=("higher", 0.0), arch=arch, steps=rep.steps,
+               prefill_compiles=rep.prefill_compiles)
+        metric(f"serving/family_{fam}_bubble_slot_steps",
+               rep.bubble_slot_steps, "slot_steps", guard=("lower", 0.0),
+               arch=arch)
+    return ok
+
+
 def production_serving(report, check: bool = False,
                        traffic_kind: str = "poisson", seed: int = 0) -> bool:
     """Production traffic through the event-driven admission loop.
@@ -855,6 +1023,8 @@ def run(report, traffic_kind: str = "poisson", seed: int = 0):
     continuous_serving(report)
     mixed_task_serving(report)
     speculative_serving(report)
+    sharded_speculative(report)
+    family_serving(report)
     production_serving(report, traffic_kind=traffic_kind, seed=seed)
 
 
@@ -891,6 +1061,8 @@ if __name__ == "__main__":
         passed = continuous_serving(_report, check=True) and passed
         passed = mixed_task_serving(_report, check=True) and passed
         passed = speculative_serving(_report, check=True) and passed
+        passed = sharded_speculative(_report, check=True) and passed
+        passed = family_serving(_report, check=True) and passed
         passed = production_serving(_report, check=True,
                                     traffic_kind=args.traffic,
                                     seed=args.seed) and passed

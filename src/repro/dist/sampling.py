@@ -178,6 +178,140 @@ def shard_sample(ctx, batch: int, temperature: float):
     return sample
 
 
+# top-p fixed-point resolution: softmax weights are quantized to integers
+# in [0, 2^14] so every cross-shard reduction is an INTEGER psum —
+# order-free and therefore bit-identical on any mesh shape (float partial
+# sums are partition-dependent and would break reshard invariance)
+_TOPP_SCALE = 1 << 14
+
+
+def _topp_keep(z, vocab, p, *, axis=None):
+    """Shared top-p nucleus selection over (possibly sharded) scores.
+
+    ``z`` is the local (B, v) slice of logits/T.
+    Returns the (B, v) bool keep-mask of the smallest set of
+    highest-probability tokens with mass >= p, resolved entirely in integer
+    arithmetic:
+
+      1. weights w = round(softmax-numerator · 2^14) per token (global max
+         subtracted first — ``pmax`` of per-shard maxima is exact);
+      2. a 2^14+1-bin weighted histogram per shard, integer-psum'd, gives
+         the global mass above any threshold without sorting across shards
+         (the "sorted-cumsum threshold scan", bucketed);
+      3. the threshold q* = max{q : mass(w >= q) >= target}; tokens with
+         w > q* are all kept, and the remaining mass deficit is covered by
+         the first ``n_tie`` threshold-weight tokens in GLOBAL vocab order
+         — each shard learns its tie offset from one scalar exchange (an
+         all-gather of per-shard tie counts).
+
+    q* >= 1 always: bin 0 carries zero mass, so mass(w >= 1) equals the
+    total and the target (= ceil(p·total), clamped to [1, total]) is met.
+    Note p -> 1 keeps every token with w >= 1 — tokens below the 2^-14
+    quantization floor are dropped even at p = 1.0.
+    """
+    b, v = z.shape
+    if axis is None:
+        gmax = jnp.max(z, axis=-1)
+        n_shards, my = 1, 0
+    else:
+        gmax = jax.lax.pmax(jnp.max(z, axis=-1), axis)
+        n_shards, my = vocab // v, jax.lax.axis_index(axis)
+    w = jnp.round(jnp.exp(z - gmax[:, None]) * _TOPP_SCALE).astype(jnp.int32)
+    total = jnp.sum(w, axis=-1)
+    hist = jax.vmap(
+        lambda wr: jnp.zeros((_TOPP_SCALE + 1,), jnp.int32).at[wr].add(wr))(w)
+    cnt_loc = None
+    if axis is not None:
+        total = jax.lax.psum(total, axis)
+        hist = jax.lax.psum(hist, axis)
+    tgt = jnp.ceil(p * total.astype(jnp.float32)).astype(jnp.int32)
+    tgt = jnp.clip(tgt, 1, total)
+    # mass(w >= q) for every threshold q: reversed cumulative histogram
+    mass = jnp.cumsum(hist[:, ::-1], axis=1)[:, ::-1]
+    qs = jnp.arange(_TOPP_SCALE + 1, dtype=jnp.int32)
+    qstar = jnp.max(jnp.where(mass >= tgt[:, None], qs[None], 0), axis=1)
+    above = jnp.concatenate(       # mass(w > q*) = mass(w >= q*+1); pad q=max+1
+        [mass, jnp.zeros((b, 1), jnp.int32)], axis=1)
+    m_gt = jnp.take_along_axis(above, (qstar + 1)[:, None], axis=1)[:, 0]
+    need = tgt - m_gt                                   # >= 1 by maximality
+    n_tie = (need + qstar - 1) // qstar                 # qstar >= 1, no /0
+    is_tie = w == qstar[:, None]
+    if axis is None:
+        before = jnp.zeros((b,), jnp.int32)
+    else:
+        cnt = jnp.sum(is_tie, axis=-1).astype(jnp.int32)
+        allc = jax.lax.all_gather(cnt, axis, axis=1)    # (B, n) scalars
+        before = jnp.sum(
+            jnp.where(jnp.arange(n_shards)[None, :] < my, allc, 0), axis=1)
+    tie_rank = jnp.cumsum(is_tie, axis=-1).astype(jnp.int32) - is_tie
+    return (w > qstar[:, None]) | (
+        is_tie & (before[:, None] + tie_rank < n_tie[:, None]))
+
+
+def _local_top_p(lg, key, *, axis, batch_axes, vocab, p, temperature):
+    """Inside shard_map: nucleus-mask the local slice, Gumbel-sample the
+    survivors, reduce the winner exactly like ``_local_sample``."""
+    b, v = lg.shape
+    start = jax.lax.axis_index(axis) * v
+    z = lg.astype(jnp.float32) / temperature
+    keep = _topp_keep(z, vocab, p, axis=axis)
+    gidx = start + jnp.arange(v)
+    off = jnp.int32(0)
+    for a in _axis_tuple(batch_axes):
+        off = off * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    rows = jnp.arange(b) + off * b
+    g = _gumbel_field(key, rows, gidx)
+    zk = jnp.where(keep, z + g, -jnp.inf)
+    li = jnp.argmax(zk, axis=-1)
+    lv = jnp.take_along_axis(zk, li[:, None], axis=-1)[:, 0]
+    gi = (li + start).astype(jnp.int32)
+    vmax = jax.lax.pmax(lv, axis)
+    cand = jnp.where(lv == vmax, gi, jnp.int32(vocab))
+    return jax.lax.pmin(cand, axis)
+
+
+def shard_top_p(ctx, batch: int, p: float, temperature: float = 1.0):
+    """Top-p (nucleus) sampler over (possibly vocab-sharded) logits →
+    ``fn(logits (B, V), key) -> (B,) int32``.
+
+    Shard-local: each shard scans its own slice against the integer
+    threshold histogram (one integer psum, vocab-independent bytes) and the
+    shards agree on the nucleus boundary with one scalar exchange per shard
+    (the tie-count all-gather) — the full vocab row is never gathered.
+    Everything cross-shard is integer arithmetic, so the kept set — and,
+    through the globally-keyed Gumbel field, the sampled stream — is
+    bit-identical across mesh shapes and to the off-mesh path.
+
+    ``temperature <= 0`` degrades to greedy with the same (lg, key)
+    signature, exactly like ``shard_sample``.
+    """
+    if not 0.0 < p <= 1.0:
+        raise ValueError(f"top-p needs 0 < p <= 1, got {p}")
+    if temperature <= 0:
+        base = shard_argmax(ctx, batch)
+        return lambda lg, key: base(lg)
+    if ctx is None:
+        def dense(lg, key):
+            b, v = lg.shape
+            z = lg.astype(jnp.float32) / temperature
+            keep = _topp_keep(z, v, float(p))
+            g = _gumbel_field(key, jnp.arange(b), jnp.arange(v))
+            zk = jnp.where(keep, z + g, -jnp.inf)
+            return jnp.argmax(zk, axis=-1).astype(jnp.int32)
+        return dense
+    ba = ctx.batch_axes(batch)
+
+    def sample(lg, key):
+        return shard_map(
+            partial(_local_top_p, axis=ctx.model_axis, batch_axes=ba,
+                    vocab=lg.shape[-1], p=float(p),
+                    temperature=float(temperature)),
+            mesh=ctx.mesh,
+            in_specs=(P(ba, ctx.model_axis), P()),
+            out_specs=P(ba), check_rep=False)(lg, key)
+    return sample
+
+
 def shard_topk(ctx, batch: int, k: int):
     """Top-k over vocab-sharded logits → ((B, k) values, (B, k) indices)."""
     if ctx is None:

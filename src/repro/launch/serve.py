@@ -98,6 +98,65 @@ def mixed_workload(tasks, batch, n_new, n_requests, vocab, stagger=2):
     return reqs
 
 
+def family_workload(cfg, seed: int = 11):
+    """Mixed-length staggered stream for ONE family, prefix state included.
+
+    SSM/hybrid prompt lengths are multiples of the tiny ``SSMConfig.chunk``
+    (the chunked-SSD prefill asserts divisibility); encdec requests carry
+    synthesized encoder frames and vlm requests image embeddings — the
+    per-request prefix state the slot protocol admits once per slot.
+    """
+    rng = np.random.default_rng(seed)
+    shapes = ((8, 4, 0), (16, 7, 0), (8, 3, 1), (24, 5, 3), (16, 6, 6)) \
+        if cfg.family in ("ssm", "hybrid") else \
+        ((6, 4, 0), (5, 9, 0), (7, 3, 1), (6, 6, 2), (4, 12, 3))
+    reqs = []
+    for s, n_new, arrival in shapes:
+        prefix = None
+        if cfg.family == "encdec":
+            prefix = rng.normal(size=(cfg.enc_frames, cfg.d_model)
+                                ).astype(np.float32)
+        elif cfg.family == "vlm":
+            prefix = rng.normal(size=(cfg.n_img_tokens, cfg.d_model)
+                                ).astype(np.float32)
+        reqs.append(Request(
+            tokens=rng.integers(0, cfg.vocab_size, size=s).astype(np.int32),
+            n_new=n_new, arrival_step=arrival, prefix=prefix))
+    return reqs
+
+
+def run_family_smoke(engine, cfg, args) -> bool:
+    """Untasked continuous serving for ANY registered family, gated on
+    token-for-token equality with per-request lockstep ``generate``.
+
+    No tuning, no scale bank — the smoke isolates the slot-state protocol
+    (paged KV, position-free recurrent rows, prefix admission) from the
+    PEQA task machinery, so every family the registry caps as servable can
+    run it, and CI fails on any drift or bubble slot-step.
+    """
+    reqs = family_workload(cfg, seed=args.seed + 11)
+    rep = engine.serve(reqs, ServeConfig(n_slots=2))
+    ok = rep.bubble_slot_steps == 0
+    if not ok:
+        print(f"[serve] FAIL: {rep.bubble_slot_steps} bubble slot-steps")
+    for i, r in enumerate(reqs):
+        pref = None if r.prefix is None else jnp.asarray(r.prefix)[None]
+        ref = np.asarray(engine.generate(jnp.asarray(r.tokens)[None],
+                                         n_new=r.n_new, prefix=pref))
+        want = list(ref[0, len(r.tokens):])
+        match = rep.tokens[i] == want
+        print(f"[serve] req{i:02d} n_prompt={r.n_prompt} n_new={r.n_new} "
+              f"prefix={'-' if r.prefix is None else r.prefix.shape} "
+              f"tokens==lockstep: {match}")
+        if not match:
+            ok = False
+    print(f"[serve] family-smoke {cfg.family} ({cfg.name}): "
+          f"steps={rep.steps} bubbles={rep.bubble_slot_steps} "
+          f"prefill_compiles={rep.prefill_compiles} "
+          f"{'OK' if ok else 'FAILED'}")
+    return ok
+
+
 def run_continuous(engine, cfg, args, tasks):
     if args.traffic == "steps":
         reqs = mixed_workload(tasks, args.batch, args.n_new,
@@ -213,6 +272,13 @@ def main():
                          "prefix and verifies them in one target step "
                          "(token-identical to greedy; the launcher replays "
                          "the stream greedily and fails on any mismatch)")
+    ap.add_argument("--family-smoke", action="store_true",
+                    help="skip tuning and serve an untasked mixed-length "
+                         "stream through the continuous engine for THIS "
+                         "arch's family (encdec frames / vlm image prefixes "
+                         "synthesized, SSM prompts chunk-aligned); exits 1 "
+                         "if any request's tokens diverge from lockstep "
+                         "generate or any bubble slot-step is observed")
     ap.add_argument("--spec-k", type=int, default=2,
                     help="speculative: draft tokens proposed per round")
     ap.add_argument("--draft-bits", type=int, default=None,
@@ -230,6 +296,9 @@ def main():
     api = registry.build(cfg)
     rng = jax.random.PRNGKey(0)
     backbone, mask = policies.prepare(api.init(rng), cfg, rng)
+    if args.family_smoke:
+        engine = Engine(api, jax.tree.map(jnp.array, backbone))
+        raise SystemExit(0 if run_family_smoke(engine, cfg, args) else 1)
     bank = ScaleBank()
 
     for i, task in enumerate(args.tasks.split(",")):

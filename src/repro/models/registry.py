@@ -29,6 +29,45 @@ def _scoped(cfg: ModelConfig, fn):
 
 
 @dataclasses.dataclass(frozen=True)
+class FamilyCaps:
+    """Per-family capability record — the serving engine's one source of
+    truth for what a family's decode state looks like (docs/DIST.md).
+
+    The slot pool consults this record instead of pattern-matching on
+    ``cfg.family``: every registered family gets one, and a family whose
+    API lacks it is refused by ``SlotPool`` (no silent garbage tracing).
+
+      * ``positional`` — decode threads an absolute position through the
+        cache (attention KV rows).  False for pure recurrent state (SSM),
+        whose ``decode_step`` ignores ``pos`` entirely.
+      * ``prefix_key`` — batch key for per-request prefix state admitted
+        once per slot (``"image_embeds"`` for vlm patch embeddings,
+        ``"frames"`` for encdec encoder inputs); ``None`` = no prefix.
+      * ``prefix_required`` — prefill raises without the prefix (encdec:
+        there is nothing to cross-attend); vlm prefixes are optional.
+      * ``prefix_positions`` — the prefix occupies decoder cache
+        positions (vlm: patch rows share the causal sequence).  Encdec
+        cross-KV lives in its own position-free leaves, so frames consume
+        ZERO decoder slots.
+      * ``bucketable`` — prompt-length bucketing (right-pad + masked
+        last-position gather) is sound: padded rows must stay causally
+        invisible, which rules out recurrent state (it integrates every
+        input) and is additionally gated on no sliding-window ring.
+      * ``slotted_reason`` — why ``decode_step_slotted`` is None (the
+        resident scheduler's refusal message); None = supported.
+      * ``verify_reason`` — why ``decode_verify`` is unusable (the
+        speculative scheduler's refusal message); None = supported.
+    """
+    positional: bool = True
+    prefix_key: Optional[str] = None
+    prefix_required: bool = False
+    prefix_positions: bool = False
+    bucketable: bool = False
+    slotted_reason: Optional[str] = None
+    verify_reason: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
 class ModelAPI:
     cfg: ModelConfig
     init: Callable            # (rng) -> params
@@ -50,6 +89,10 @@ class ModelAPI:
     decode_verify: Optional[Callable] = None
     # slotted variant (+ task_stack, task_ids); gated like decode_step_slotted
     decode_verify_slotted: Optional[Callable] = None
+    # what the serving engine may assume about this family's decode state;
+    # ``build`` always sets it — None only on hand-rolled stand-ins, which
+    # the slot pool refuses
+    caps: Optional[FamilyCaps] = None
 
     def input_specs(self, shape: ShapeConfig) -> dict:
         return input_specs(self.cfg, shape)
@@ -88,13 +131,28 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
     return batch
 
 
+_NO_VERIFY = "family has no multi-token verify step (decode_verify)"
+_NO_SLOTTED = ("recurrent state layers cannot thread per-slot scales "
+               "(no slotted decode step)")
+
+
 def build(cfg: ModelConfig) -> ModelAPI:
     fam = cfg.family
     if fam in ("dense", "moe", "vlm"):
         def prefill_fn(params, batch):
             return transformer.prefill(params, batch["tokens"], cfg,
-                                       prefix_embeds=batch.get("image_embeds"))
+                                       prefix_embeds=batch.get("image_embeds"),
+                                       last_pos=batch.get("last_pos"))
 
+        moe_slotted = ("MoE expert dispatch cannot thread per-slot scales "
+                       "(no slotted decode step)")
+        caps = FamilyCaps(
+            positional=True, bucketable=True,
+            prefix_key="image_embeds" if fam == "vlm" else None,
+            prefix_positions=fam == "vlm",
+            slotted_reason=moe_slotted if cfg.moe is not None else None,
+            verify_reason=("MoE expert dispatch is not supported in the "
+                           "verify step") if cfg.moe is not None else None)
         return ModelAPI(
             cfg=cfg,
             init=lambda rng: transformer.init(rng, cfg),
@@ -109,6 +167,7 @@ def build(cfg: ModelConfig) -> ModelAPI:
                 cfg, lambda p, st, b, tid: transformer.prefill(
                     p, b["tokens"], cfg,
                     prefix_embeds=b.get("image_embeds"),
+                    last_pos=b.get("last_pos"),
                     task_stack=st, task_ids=tid)),
             decode_verify=_scoped(
                 cfg, lambda p, c, t, pos: transformer.decode_verify(
@@ -116,6 +175,7 @@ def build(cfg: ModelConfig) -> ModelAPI:
             decode_verify_slotted=None if cfg.moe is not None else _scoped(
                 cfg, lambda p, st, c, t, pos, tid: transformer.decode_verify(
                     p, c, t, pos, cfg, task_stack=st, task_ids=tid)),
+            caps=caps,
         )
     if fam == "hybrid":
         return ModelAPI(
@@ -125,6 +185,9 @@ def build(cfg: ModelConfig) -> ModelAPI:
             prefill=lambda p, b: zamba2.prefill(p, b["tokens"], cfg),
             decode_step=lambda p, c, t, pos: zamba2.decode_step(p, c, t, pos, cfg),
             init_cache=lambda b, s: zamba2.init_cache(cfg, b, s),
+            caps=FamilyCaps(positional=True, bucketable=False,
+                            slotted_reason=_NO_SLOTTED,
+                            verify_reason=_NO_VERIFY),
         )
     if fam == "ssm":
         return ModelAPI(
@@ -134,14 +197,25 @@ def build(cfg: ModelConfig) -> ModelAPI:
             prefill=lambda p, b: xlstm.prefill(p, b["tokens"], cfg),
             decode_step=lambda p, c, t, pos: xlstm.decode_step(p, c, t, pos, cfg),
             init_cache=lambda b, s: xlstm.init_cache(cfg, b, s),
+            caps=FamilyCaps(positional=False, bucketable=False,
+                            slotted_reason=_NO_SLOTTED,
+                            verify_reason=_NO_VERIFY),
         )
     if fam == "encdec":
         return ModelAPI(
             cfg=cfg,
             init=lambda rng: whisper.init(rng, cfg),
             loss_fn=lambda p, b: whisper.loss_fn(p, b, cfg),
-            prefill=lambda p, b: whisper.prefill(p, b["frames"], b["tokens"], cfg),
+            prefill=lambda p, b: whisper.prefill(p, b["frames"], b["tokens"],
+                                                 cfg,
+                                                 last_pos=b.get("last_pos")),
             decode_step=lambda p, c, t, pos: whisper.decode_step(p, c, t, pos, cfg),
             init_cache=lambda b, s: whisper.init_cache(cfg, b, s),
+            caps=FamilyCaps(positional=True, bucketable=True,
+                            prefix_key="frames", prefix_required=True,
+                            prefix_positions=False,
+                            slotted_reason=("encoder-decoder backbone has "
+                                            "no slotted decode step"),
+                            verify_reason=_NO_VERIFY),
         )
     raise ValueError(f"unknown family {fam}")

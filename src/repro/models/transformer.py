@@ -117,13 +117,20 @@ def loss_fn(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
 def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
             prefix_embeds: Optional[jax.Array] = None,
             task_stack: dict | None = None,
-            task_ids: jax.Array | None = None):
+            task_ids: jax.Array | None = None,
+            last_pos=None):
     """Prefill: forward over the prompt, building the KV cache.
 
     task_stack/task_ids: same contract as ``_decode_tokens`` — the prompt's
     quantized linears read each batch row's scales from the resident stack
     instead of the live tree, so admitting a request for a resident task
     needs NO host→device scale swap (``task_ids: (B,) int32`` stack rows).
+
+    last_pos (traced int32 scalar): index of the last REAL token in the
+    (prefix +) prompt sequence when the prompt is right-padded to a bucket
+    length — the head reads that row instead of ``[:, -1:]``.  Padded rows
+    sit causally AFTER every real row, so they never influence it; ``None``
+    (unpadded) keeps the original path bit-for-bit.
 
     Returns (last_logits (B, V), cache).
     """
@@ -165,10 +172,12 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
         else params["layers"]
     h, cache = jax.lax.scan(body, h, xs)
     h = common.norm_apply(params["final_norm"], h, cfg)
-    # the head sees only the last token: one row per batch element
+    # the head sees only the last (real) token: one row per batch element
     head_slots = linear.slot_entry((task_ids, task_stack), "lm_head") \
         if slotted else None
-    logits = common.head_apply(params, params["embed"], h[:, -1:], cfg,
+    hl = h[:, -1:] if last_pos is None else \
+        jax.lax.dynamic_slice_in_dim(h, last_pos, 1, axis=1)
+    logits = common.head_apply(params, params["embed"], hl, cfg,
                                slots=head_slots)
     return logits[:, 0], cache
 

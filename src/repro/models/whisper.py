@@ -125,8 +125,14 @@ def loss_fn(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
 
 
 def prefill(params: dict, frames: jax.Array, tokens: jax.Array,
-            cfg: ModelConfig):
-    """Encode + run decoder over the prompt; build self+cross caches."""
+            cfg: ModelConfig, last_pos=None):
+    """Encode + run decoder over the prompt; build self+cross caches.
+
+    ``last_pos`` (traced int32 scalar): index of the last REAL prompt token
+    when the prompt is right-padded to a bucketed length — the head reads
+    that row instead of ``[:, -1:]``, so padded rows (causally invisible to
+    every real row) never reach the logits.  ``None`` = unpadded prompt.
+    """
     enc_out = encode(params, frames, cfg)
     dec = params["dec"]
     b, s = tokens.shape
@@ -159,7 +165,9 @@ def prefill(params: dict, frames: jax.Array, tokens: jax.Array,
 
     h, cache = jax.lax.scan(body, h, dec["layers"])
     h = common.norm_apply(dec["final_norm"], h, cfg)
-    logits = common.head_apply({}, dec["embed"], h[:, -1:],
+    hl = h[:, -1:] if last_pos is None else \
+        jax.lax.dynamic_slice_in_dim(h, last_pos, 1, axis=1)
+    logits = common.head_apply({}, dec["embed"], hl,
                                cfg.replace(tie_embeddings=True))
     return logits[:, 0], cache
 
@@ -174,12 +182,20 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
 
 def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
                 cfg: ModelConfig):
-    """One decoder step against frozen cross K/V + growing self K/V."""
+    """One decoder step against frozen cross K/V + growing self K/V.
+
+    ``pos`` is a scalar (lockstep) or a (B,) per-slot position vector (the
+    continuous pool) — the learned positional row is gathered per batch row
+    in the vector case; the self-attention cache write/mask already speaks
+    both (``attention.apply_decode``)."""
     dec = params["dec"]
     b = tokens.shape[0]
     h = common.embed_apply(dec["embed"], tokens, cfg)
-    h = h + jax.lax.dynamic_slice_in_dim(dec["pos"], pos, 1, axis=0
-                                         ).astype(h.dtype)[None]
+    if jnp.ndim(pos) == 0:
+        pe = jax.lax.dynamic_slice_in_dim(dec["pos"], pos, 1, axis=0)[None]
+    else:
+        pe = dec["pos"][pos][:, None]          # (B, 1, d) per-slot rows
+    h = h + pe.astype(h.dtype)
 
     def body(h, xs):
         layer_p, ck, cv, xk, xv = xs

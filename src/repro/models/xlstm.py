@@ -259,11 +259,14 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
     d_inner, hd = _dims(cfg)
     h = cfg.n_heads
     shd = cfg.d_model // h
-    z = jnp.zeros((n_groups, batch, h, shd), jnp.float32)
+    def z():
+        # one buffer PER leaf: the serving engine donates the cache into
+        # its jitted admit/decode steps, and donation rejects aliased args
+        return jnp.zeros((n_groups, batch, h, shd), jnp.float32)
     return {
-        "s_c": z, "s_n": z,
+        "s_c": z(), "s_n": z(),
         "s_m": jnp.full((n_groups, batch, h, shd), -1e9, jnp.float32),
-        "s_h": z,
+        "s_h": z(),
         "m_S": jnp.zeros((n_groups, n_m, batch, h, hd + 1, hd), jnp.float32),
     }
 

@@ -66,6 +66,13 @@ class ServeConfig:
     prefill_s: Optional[float] = None
     spec_k: int = 2
     draft_bits: Optional[int] = None
+    # round admitted prompts up to power-of-two lengths (masked padding):
+    # a mixed trace compiles O(log max_len) prefill variants instead of one
+    # per distinct length.  Token streams are unchanged — padded rows are
+    # causally invisible and the head gathers the last REAL row.  Ignored
+    # (always off) for families the registry marks non-bucketable
+    # (recurrent state) and under sliding-window ring caches.
+    bucket_prompts: bool = True
 
     def __post_init__(self):
         if self.n_slots < 1:

@@ -138,6 +138,10 @@ class ServeReport:
     # decoded / steps is the accepted-tokens-per-target-step headline
     draft_steps: int = 0
     resident_installs: int = 0         # stack rows (re)installed this serve
+    # distinct prefill/admit shapes this run traced (bucketed prompt length
+    # × prefix rows × padded-or-not) — the compile count prompt-length
+    # bucketing exists to bound (O(log max_len) instead of O(lengths))
+    prefill_compiles: int = 0
     scheduler: str = "drain"           # which admission policy actually ran
     peak_queue_depth: int = 0          # deepest the wait queue ever got
     config: Optional[ServeConfig] = None

@@ -29,6 +29,10 @@ class Request:
     n_new: int                          # generation budget (includes token 0)
     task: Optional[str] = None          # ScaleBank task the request targets
     eos_id: Optional[int] = None        # early-stop token
+    # per-request prefix state admitted once into the slot (family-keyed by
+    # the registry capability record): (P, d_model) image patch embeddings
+    # for vlm, (enc_frames, d_model) encoder frames for encdec
+    prefix: Optional[np.ndarray] = None
     arrival_s: Optional[float] = None   # wall-clock seconds (harness native)
     arrival_step: int = 0               # decode-step index (test clock)
     # deprecated alias of ``arrival_step`` (pre-ServeConfig API)
@@ -71,14 +75,17 @@ def to_trace(requests) -> List[TraceRecord]:
     """Serialize requests to plain-dict trace records (JSON-ready)."""
     recs = []
     for r in requests:
-        recs.append({
+        rec = {
             "arrival_s": r.arrival_time(1.0) if r.arrival_s is None
             else float(r.arrival_s),
             "tokens": [int(t) for t in np.asarray(r.tokens).reshape(-1)],
             "n_new": int(r.n_new),
             "task": r.task,
             "eos_id": r.eos_id,
-        })
+        }
+        if r.prefix is not None:
+            rec["prefix"] = np.asarray(r.prefix, np.float32).tolist()
+        recs.append(rec)
     return recs
 
 
@@ -105,8 +112,11 @@ def from_trace(records, *, vocab: Optional[int] = None,
         else:
             raise ValueError(f"trace record {i} has neither tokens nor "
                              f"prompt_len: {sorted(rec)}")
+        prefix = rec.get("prefix")
         reqs.append(Request(
             tokens=toks, n_new=int(rec["n_new"]),
             task=rec.get("task"), eos_id=rec.get("eos_id"),
+            prefix=None if prefix is None
+            else np.asarray(prefix, np.float32),
             arrival_s=float(rec.get("arrival_s", 0.0))))
     return reqs

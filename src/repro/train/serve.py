@@ -69,20 +69,21 @@ from repro.serve.request import Request
 __all__ = ["Engine", "Request", "RequestMetrics", "ServeConfig",
            "ServeReport", "SlotPool"]
 
-# families whose decode step accepts a per-slot position vector (the
-# attention KV-cache layout; SSM/recurrent families have no position dim
-# and need no paging — their continuous support is a follow-on)
-_CONTINUOUS_FAMILIES = ("dense", "moe", "vlm")
-
-
 class SlotPool:
-    """Paged KV cache: a fixed pool of ``n_slots`` sequence slots.
+    """Paged slot pool: a fixed pool of ``n_slots`` sequence slots.
 
     Device state: the cache tree (batch dim = slot dim, created sharded per
     ``cache_specs``).  Host mirrors (one int/bool per slot — the scheduler
     state): ``pos`` (next absolute position = tokens written so far),
     ``active``, ``tok`` (last sampled token, the next decode input), and
     per-slot metadata (request, collected output, task id).
+
+    The pool is FAMILY-AGNOSTIC: admission/eviction key on the structural
+    cache dims (``_cache_dims``) and the registry's ``FamilyCaps`` record,
+    not on the family name.  Attention KV leaves page along their seq dim;
+    position-free leaves (SSM/recurrent state, encdec cross-KV) admit as
+    pure batch-dim row writes; prefix state (vlm image embeddings, encdec
+    encoder frames) is admitted once per slot through the prefill.
     """
 
     def __init__(self, engine: "Engine", n_slots: int, cache_len: int):
@@ -90,11 +91,11 @@ class SlotPool:
             raise ValueError(f"need n_slots >= 1 and cache_len >= 1, got "
                              f"({n_slots}, {cache_len})")
         fam = getattr(engine.api.cfg, "family", None)
-        if fam not in _CONTINUOUS_FAMILIES:
+        if getattr(engine.api, "caps", None) is None:
             raise NotImplementedError(
-                f"continuous batching needs a per-slot-position decode step; "
-                f"family {fam!r} does not provide one (have: "
-                f"{_CONTINUOUS_FAMILIES})")
+                f"continuous batching needs a family capability record "
+                f"(ModelAPI.caps) describing the decode-state protocol; "
+                f"family {fam!r} does not provide one")
         self.n_slots = n_slots
         self.cache_len = cache_len
         self.cache = engine._init_cache(n_slots, cache_len)
@@ -105,6 +106,9 @@ class SlotPool:
         self.slotted = False           # decode through the stacked-scale step
         self.meta: List[Optional[dict]] = [None] * n_slots
         self.task: List[Optional[str]] = [None] * n_slots
+        # distinct prefill shapes admitted through this pool — the compile
+        # meter prompt-length bucketing is judged by (ServeReport)
+        self._prefill_keys: set = set()
         # device-resident (tok, pos, active) between scheduling events:
         # steps with no admit/evict reuse the previous step's outputs
         # instead of re-uploading the host mirrors (3 puts/step saved)
@@ -174,6 +178,39 @@ class Engine:
                 shard_rules.cache_batch_dims(self.api.init_cache, 2, sl),
                 shard_rules.cache_seq_dims(self.api.init_cache, 2, sl))
         return self._dims
+
+    def _has_seq_leaf(self) -> bool:
+        """Does ANY cache leaf carry a position (seq) dim?  False for pure
+        recurrent families (xlstm: ``init_cache`` ignores ``seq_len``
+        entirely) — there, capacity budgeting and cache growth are
+        meaningless and must not reject requests."""
+        return any(sd >= 0 for sd in jax.tree.leaves(self._cache_dims()[1]))
+
+    def _prefix_rows(self, prefix) -> int:
+        """Decoder cache rows a request prefix occupies (0 when the prefix
+        lives in its own position-free state, e.g. encdec cross-KV)."""
+        caps = getattr(self.api, "caps", None)
+        if prefix is None or caps is None or not caps.prefix_positions:
+            return 0
+        return int(np.asarray(prefix).shape[-2])
+
+    def _check_prefix(self, prefix):
+        """Validate a request prefix against the capability record."""
+        caps = getattr(self.api, "caps", None)
+        key = None if caps is None else caps.prefix_key
+        if prefix is not None and key is None:
+            raise ValueError(
+                f"family {getattr(self.api.cfg, 'family', None)!r} takes no "
+                f"per-request prefix state (FamilyCaps.prefix_key is None)")
+        if prefix is None and caps is not None and caps.prefix_required:
+            raise ValueError(
+                f"family {getattr(self.api.cfg, 'family', None)!r} requires "
+                f"prefix state {key!r} on every request (encoder inputs)")
+
+    @staticmethod
+    def _bucket_len(s: int, cap: int) -> int:
+        """Smallest power of two >= s, clamped to the pool capacity."""
+        return min(1 << (s - 1).bit_length(), cap)
 
     def _cache_shardings(self, cache, b):
         """NamedSharding tree for the cache at batch ``b`` — the SAME
@@ -281,6 +318,9 @@ class Engine:
         bit-plane backbone (the draft is a prefix READ of the same codes —
         zero extra weight memory)."""
         cfg = self.api.cfg
+        caps = getattr(self.api, "caps", None)
+        if caps is not None and caps.verify_reason is not None:
+            return caps.verify_reason
         if self.api.decode_verify is None:
             return "family has no multi-token verify step (decode_verify)"
         if getattr(cfg, "moe", None) is not None:
@@ -466,8 +506,14 @@ class Engine:
 
     # ------------------------------------------------------------- generate
     def generate(self, tokens: jnp.ndarray, n_new: int,
-                 cache_len: Optional[int] = None) -> jnp.ndarray:
+                 cache_len: Optional[int] = None,
+                 prefix: Optional[jnp.ndarray] = None) -> jnp.ndarray:
         """Greedy decode (LOCKSTEP baseline). tokens (B, S) → (B, S + n_new).
+
+        ``prefix``: (B, P, d) per-row prefix state, fed to the prefill
+        under the family's ``FamilyCaps.prefix_key`` (vlm image embeddings
+        occupy P decoder positions; encdec frames occupy none — the
+        cross-KV is its own position-free state).
 
         ``cache_len`` is validated, not clamped: a dense cache too short
         for the generation would let XLA clamp the out-of-range
@@ -475,11 +521,13 @@ class Engine:
         silently overwrite the LAST KV slot instead of erroring.  The
         deepest write is position prompt+n_new-2 (the final sampled token's
         KV is never written), so prompt+n_new-1 slots suffice.  Ring
-        (sliding-window) caches wrap by construction, so any positive
-        capacity is legal there.
+        (sliding-window) caches wrap, and position-free caches have no
+        capacity at all, so any positive value is legal there.
         """
+        self._check_prefix(prefix)
         b, s = tokens.shape
-        total = s + n_new
+        s_eff = s + self._prefix_rows(prefix)  # decoder positions consumed
+        total = s_eff + n_new
         if cache_len is None:
             cache_len = total
         elif cache_len <= 0:
@@ -487,16 +535,20 @@ class Engine:
                 f"cache_len={cache_len} must be positive (omit it for the "
                 f"default prompt+n_new={total})")
         elif (cache_len < total - 1
-              and getattr(self.api.cfg, "swa_window", None) is None):
+              and getattr(self.api.cfg, "swa_window", None) is None
+              and self._has_seq_leaf()):
             raise ValueError(
                 f"cache_len={cache_len} < prompt+n_new-1={total - 1}: a "
                 f"dense cache cannot hold the generation; XLA would clamp "
                 f"the overflowing writes onto the last KV slot")
         sample = self._sampler(b)
+        batch = {"tokens": tokens}
+        if prefix is not None:
+            batch[self.api.caps.prefix_key] = jnp.asarray(prefix)
         # prefill builds a cache sized to the prompt; re-home it into a
         # cache with decode headroom
-        logits, cache = self._prefill(self.params, {"tokens": tokens})
-        cache = self._grow_cache(cache, b, cache_len, s)
+        logits, cache = self._prefill(self.params, batch)
+        cache = self._grow_cache(cache, b, cache_len, s_eff)
         out = [tokens]
         tok = sample(logits)[:, None]
         for i in range(n_new):
@@ -504,7 +556,7 @@ class Engine:
             if i == n_new - 1:
                 break
             logits, cache = self._decode(self.params, cache, tok,
-                                         jnp.int32(s + i))
+                                         jnp.int32(s_eff + i))
             tok = sample(logits)[:, None]
         return jnp.concatenate(out, axis=1)
 
@@ -532,7 +584,10 @@ class Engine:
         (``dist.sharding.cache_seq_dims``), NEVER the first mismatched dim:
         a first-match pick updates the wrong axis whenever two dims differ
         (batch-padded prompt cache) or the seq extent collides with another
-        dim.  Any mismatch beyond the seq dim is a caller error and raises.
+        dim.  Any mismatch beyond the seq dim is a caller error and raises
+        — in particular a POSITION-FREE leaf (seq dim -1: recurrent state,
+        encdec cross-KV) has no axis to grow and only passes through when
+        the shapes already agree.
         """
         full = self._init_cache(b, cache_len)
         sdims = self._cache_dims()[1]
@@ -615,7 +670,8 @@ class Engine:
 
     def admit(self, pool: SlotPool, request: Request,
               rid: Optional[int] = None,
-              task_row: Optional[int] = None) -> int:
+              task_row: Optional[int] = None,
+              bucket: bool = True) -> int:
         """Prefill ``request`` and install it into a free slot. Returns the
         slot index.  The first generated token is sampled here (from the
         prefill logits), exactly as the lockstep path does.
@@ -623,7 +679,17 @@ class Engine:
         task_row: resident-stack row holding this request's scales — the
         prefill reads them through ``prefill_slotted`` (and the live
         ``current_task`` scales are NEVER consulted, so no ``switch_task``
-        is needed at admit).  ``None`` = prefill from the live tree."""
+        is needed at admit).  ``None`` = prefill from the live tree.
+
+        bucket: right-pad the prompt to a power-of-two length so mixed
+        traffic compiles O(log max_len) prefill shapes instead of one per
+        distinct length.  Sound only when padded rows stay invisible —
+        causal attention hides rows past the last real token and the head
+        gathers that row (``last_pos``) — so it silently stays off for
+        non-bucketable families (recurrent state integrates every input)
+        and sliding-window ring caches (padded writes would wrap onto
+        committed rows).  Token streams are unchanged either way.
+        """
         slot = pool.free_slot()
         if slot is None:
             raise RuntimeError("admit: no free slot (evict first)")
@@ -633,10 +699,15 @@ class Engine:
         if s < 1 or n_new < 1:
             raise ValueError(f"need prompt >= 1 and n_new >= 1 tokens, got "
                              f"({s}, {n_new})")
-        if (s + n_new - 1 > pool.cache_len
-                and getattr(self.api.cfg, "swa_window", None) is None):
+        prefix = getattr(request, "prefix", None)
+        self._check_prefix(prefix)
+        p_rows = self._prefix_rows(prefix)   # decoder positions the prefix eats
+        s_eff = s + p_rows
+        has_seq = self._has_seq_leaf()
+        swa = getattr(self.api.cfg, "swa_window", None) is not None
+        if has_seq and not swa and s_eff + n_new - 1 > pool.cache_len:
             raise ValueError(
-                f"request needs {s + n_new - 1} cache slots, pool has "
+                f"request needs {s_eff + n_new - 1} cache slots, pool has "
                 f"{pool.cache_len}")
         if (task_row is None and request.task is not None
                 and self.bank is not None
@@ -645,21 +716,37 @@ class Engine:
                 f"request targets task {request.task!r} but the engine "
                 f"serves {self.current_task!r}; switch_task first (the "
                 f"scheduler drains the pool before switching)")
+        caps = self.api.caps
+        bucket = bucket and caps.bucketable and has_seq and not swa
+        s_pad = self._bucket_len(s, pool.cache_len - p_rows) if bucket else s
+        if s_pad != s:
+            toks = np.pad(toks, (0, s_pad - s))   # masked filler rows
         prompt = jnp.asarray(toks)[None]
         if self.ctx is not None:
             prompt = jax.device_put(prompt, self.ctx.sharding())
+        batch = {"tokens": prompt}
+        if prefix is not None:
+            pref = jnp.asarray(np.asarray(prefix))[None]
+            if self.ctx is not None:
+                pref = jax.device_put(pref, self.ctx.sharding())
+            batch[caps.prefix_key] = pref
+        if s_pad != s:
+            # traced scalar: every prompt bucketed to s_pad shares one
+            # compile; unpadded prompts keep the original batch treedef
+            batch["last_pos"] = jnp.int32(p_rows + s - 1)
+        pool._prefill_keys.add((s_pad, p_rows, s_pad != s))
         if task_row is not None:
             tid = jnp.full((1,), task_row, jnp.int32)
             if self.ctx is not None:
                 tid = jax.device_put(tid, self.ctx.sharding())
             logits, pcache = self._slotted_prefill_fn()(
-                self.params, self.resident.stack, {"tokens": prompt}, tid)
+                self.params, self.resident.stack, batch, tid)
         else:
-            logits, pcache = self._prefill(self.params, {"tokens": prompt})
+            logits, pcache = self._prefill(self.params, batch)
         self._check_admit_shapes(pool, pcache)
         t0 = int(np.asarray(self._sampler(1)(logits))[0])
         pool.cache = self._admit_write()(pool.cache, pcache, jnp.int32(slot))
-        pool.pos[slot] = s
+        pool.pos[slot] = s_eff
         pool.active[slot] = True
         pool.tok[slot] = t0
         pool.task[slot] = request.task or self.current_task
@@ -876,8 +963,11 @@ class Engine:
                         and not (use_spec
                                  and self.api.decode_verify_slotted is None))
         if cfg.scheduler == "resident" and not use_resident:
+            caps = getattr(self.api, "caps", None)
             missing = ("no ScaleBank attached" if self.bank is None
-                       else "family has no slotted decode step"
+                       else (caps.slotted_reason
+                             if caps is not None and caps.slotted_reason
+                             else "family has no slotted decode step")
                        if self.api.decode_step_slotted is None
                        else "not every request names a task")
             raise ValueError(f"scheduler='resident' unsupported here: "
@@ -902,7 +992,10 @@ class Engine:
                                config=cfg)
         eff_cache_len = cfg.cache_len
         if eff_cache_len is None:
-            eff_cache_len = max(r.n_prompt + int(r.n_new) for r in requests)
+            # prefix rows (vlm image tokens) share the slot's cache capacity
+            eff_cache_len = max(
+                self._prefix_rows(getattr(r, "prefix", None))
+                + r.n_prompt + int(r.n_new) for r in requests)
         if use_spec:
             # rollback headroom: a round starting at the final needed
             # position still writes spec_k provisional rows past it —
@@ -981,7 +1074,8 @@ class Engine:
                     waitq.popleft()
                     m.admit_s = now
                     now += admit_cost
-                    slot = self.admit(pool, req, rid=rid, task_row=row)
+                    slot = self.admit(pool, req, rid=rid, task_row=row,
+                                      bucket=cfg.bucket_prompts)
                     m.first_token_s = now
                     pool.tid[slot] = row
                     pool._dev = None
@@ -996,7 +1090,8 @@ class Engine:
                     waitq.popleft()
                     m.admit_s = now
                     now += admit_cost
-                    slot = self.admit(pool, req, rid=rid)
+                    slot = self.admit(pool, req, rid=rid,
+                                      bucket=cfg.bucket_prompts)
                     m.first_token_s = now
                 if self._slot_done(pool, slot):
                     finish_slot(slot)
@@ -1047,6 +1142,7 @@ class Engine:
             draft_steps=pool.draft_steps,
             resident_installs=(resident.installs - installs0
                                if use_resident else 0),
+            prefill_compiles=len(pool._prefill_keys),
             scheduler=sched_name, peak_queue_depth=peak_queue, config=cfg)
 
     # ------------------------------------------------------------ introspect

@@ -189,13 +189,15 @@ def test_admit_validation(engine):
                                    n_new=8))
 
 
-def test_pool_rejects_positionless_families():
-    """SSM/recurrent caches have no position dim to page over — the pool
-    must refuse them loudly instead of tracing garbage."""
+def test_pool_rejects_capless_apis():
+    """Slot admission is a protocol now: the pool keys on the registry's
+    ``FamilyCaps`` record, so a hand-rolled API without one must be refused
+    loudly instead of tracing garbage (every registry family has a record —
+    SSM/recurrent included, served as pure per-row slot writes)."""
     fake = types.SimpleNamespace(
         cfg=types.SimpleNamespace(family="ssm", vocab_size=8),
         prefill=lambda *a: None, decode_step=lambda *a: None,
         init_cache=lambda b, s: {})
     eng = Engine(fake, {})
-    with pytest.raises(NotImplementedError, match="per-slot-position"):
+    with pytest.raises(NotImplementedError, match="capability record"):
         eng.open_pool(2, 8)

@@ -12,6 +12,10 @@ serving acceptance surface on a (2, 4) mesh:
   * the logitshard decode step contains no vocab-dimension all-gather
     while the replicated baseline contains exactly the one it deletes,
   * end-to-end: mesh-engine greedy generation equals the host engine's.
+
+Further children cover Gumbel-max and nucleus (top-p) sampling — both
+bit-identical across mesh shapes and off-mesh — continuous batching on the
+mesh, and speculative decode through the sharded logitshard path.
 """
 import subprocess
 import sys
@@ -291,6 +295,134 @@ def test_shard_sample_reshard_invariant_subprocess():
                          capture_output=True, text=True, timeout=900,
                          env=subproc_env())
     assert "SUBPROC_SAMPLE_OK" in res.stdout, res.stderr[-3000:]
+
+
+_TOPP_TEST = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.dist import context as dctx, sampling
+
+    key = jax.random.PRNGKey(42)
+    B, V = 8, 64
+    lg = jax.random.normal(jax.random.PRNGKey(1), (B, V)) * 3.0
+
+    # off-mesh reference stream
+    dense = sampling.shard_top_p(None, B, 0.9, temperature=0.8)
+    want = np.asarray(dense(lg, key))
+
+    # every cross-shard reduction in the nucleus selection is INTEGER
+    # (fixed-point weights, histogram psum, scalar tie exchange), so the
+    # kept set — and the sampled stream — is bit-identical across mesh
+    # shapes and to the off-mesh path
+    for shape in ((2, 4), (1, 8)):
+        mesh = jax.make_mesh(shape, ("data", "model"))
+        ctx = dctx.make_ctx(mesh)
+        fn = jax.jit(sampling.shard_top_p(ctx, B, 0.9, temperature=0.8))
+        got = np.asarray(fn(jax.device_put(lg, ctx.logits_sharding(B)), key))
+        assert (got == want).all(), (shape, got, want)
+
+    # temperature <= 0 degrades to greedy (same (lg, key) signature)
+    g = sampling.shard_top_p(None, B, 0.9, temperature=0.0)
+    assert (np.asarray(g(lg, key))
+            == np.asarray(jnp.argmax(lg, axis=-1))).all()
+
+    # p -> 0 shrinks the nucleus to the single global max: exact argmax
+    tiny = sampling.shard_top_p(None, B, 1e-6, temperature=0.8)
+    assert (np.asarray(tiny(lg, key))
+            == np.asarray(jnp.argmax(lg, axis=-1))).all()
+
+    # different keys give different samples (it IS sampling)
+    k2 = jax.random.PRNGKey(43)
+    assert (np.asarray(dense(lg, k2)) != want).any()
+
+    # every draw stays INSIDE the nucleus: at p=0.5 the sampled ids must
+    # sit in the smallest softmax prefix covering 0.5 (+2 ranks of
+    # fixed-point slack)
+    z = np.asarray(lg, np.float64) / 0.8
+    prob = np.exp(z - z.max(-1, keepdims=True))
+    prob /= prob.sum(-1, keepdims=True)
+    order = np.argsort(-prob, axis=-1)
+    half = sampling.shard_top_p(None, B, 0.5, temperature=0.8)
+    for k in range(50):
+        s = np.asarray(half(lg, jax.random.PRNGKey(k)))
+        for b in range(B):
+            c = np.cumsum(prob[b][order[b]])
+            ncut = int(np.searchsorted(c, 0.5) + 1)
+            assert s[b] in set(order[b][:ncut + 2]), (b, int(s[b]), ncut)
+
+    # factory validates p
+    try:
+        sampling.shard_top_p(None, B, 0.0)
+        raise SystemExit("p=0 accepted")
+    except ValueError:
+        pass
+    print("SUBPROC_TOPP_OK")
+""")
+
+
+def test_shard_top_p_reshard_invariant_subprocess():
+    """Shard-local nucleus sampling: bit-identical streams across mesh
+    shapes and off-mesh (integer fixed-point threshold selection), greedy
+    degrade at T<=0, argmax at p->0, and every draw inside the nucleus."""
+    res = subprocess.run([sys.executable, "-c", _TOPP_TEST],
+                         capture_output=True, text=True, timeout=900,
+                         env=subproc_env())
+    assert "SUBPROC_TOPP_OK" in res.stdout, res.stderr[-3000:]
+
+
+_SPEC_SHARD_TEST = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import configs
+    from repro.configs.base import QuantConfig, TuningConfig
+    from repro.core import policies
+    from repro.dist import context as dctx
+    from repro.dist import sharding as shard_rules
+    from repro.models import registry
+    from repro.serve import ServeConfig
+    from repro.train.serve import Engine, Request
+
+    # model axis 2: the tiny plane config's quant-group extents
+    # (d_model/group = 2) bound the tensor split
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    ctx = dctx.make_ctx(mesh)
+    cfg = configs.paper_lm(n_layers=1, d_model=64, n_heads=2, d_ff=128,
+                           vocab=128).replace(
+        tuning=TuningConfig(mode="peqa"),
+        quant=QuantConfig(bits=4, n_grid=2, layout="plane"))
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p, _ = policies.prepare(api.init(rng), cfg, rng)
+    p = jax.tree.map(np.asarray, p)
+    assert shard_rules.validate_for_mesh(p, mesh) == []
+    mk = lambda: Engine(
+        api, jax.device_put(p, shard_rules.named_shardings(ctx, p)),
+        ctx=ctx, logitshard=True)
+
+    reqs = [Request(tokens=(np.arange(6, dtype=np.int32) * (i + 1)) % 128,
+                    n_new=(16, 24, 32)[i % 3]) for i in range(8)]
+    greedy = mk().serve(reqs, ServeConfig(n_slots=4, scheduler="auto"))
+    spec = mk().serve(reqs, ServeConfig(n_slots=4, scheduler="speculative",
+                                        spec_k=2, draft_bits=3))
+    assert spec.scheduler == "speculative"
+    for i, (a, b) in enumerate(zip(greedy.tokens, spec.tokens)):
+        assert a is not None and a == b, f"req {i} diverges on the mesh"
+    assert spec.steps < greedy.steps, (spec.steps, greedy.steps)
+    assert (spec.acceptance_rate or 0.0) > 0.0
+    print("SUBPROC_SPEC_OK")
+""")
+
+
+def test_sharded_speculative_subprocess():
+    """Speculative decode through the sharded logitshard path: drafts and
+    multi-token verifies on a (4,2) mesh stay token-for-token equal to
+    greedy while spending fewer target steps."""
+    res = subprocess.run([sys.executable, "-c", _SPEC_SHARD_TEST],
+                         capture_output=True, text=True, timeout=900,
+                         env=subproc_env())
+    assert "SUBPROC_SPEC_OK" in res.stdout, res.stderr[-3000:]
 
 
 def test_continuous_serving_subprocess():

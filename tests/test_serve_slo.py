@@ -206,6 +206,50 @@ def test_serve_config_validation():
     assert ServeConfig(prefill_s=None).admit_cost_s == ServeConfig().step_s
 
 
+# ------------------------------------------------- prompt-length bucketing
+
+def test_prompt_bucketing_bounds_prefill_compiles(setup):
+    """16 distinct prompt lengths bucket into ≤ ceil(log2 max)+1 padded
+    prefill shapes with token streams IDENTICAL to the unbucketed run —
+    right-padded rows stay causally invisible (exact exp-underflow) and
+    the last-real-position gather reads the true final logit row."""
+    eng = _engine(setup)
+    lengths = [2, 3, 4, 5, 6, 7, 9, 10, 11, 13, 17, 19, 23, 25, 29, 31]
+    rs = np.random.default_rng(5)
+    reqs = [Request(tokens=rs.integers(0, 128, size=s).astype(np.int32),
+                    n_new=3, arrival_step=i // 4)
+            for i, s in enumerate(lengths)]
+    rep_b = eng.serve(reqs, ServeConfig(n_slots=3))
+    rep_u = eng.serve(reqs, ServeConfig(n_slots=3, bucket_prompts=False))
+    assert rep_b.tokens == rep_u.tokens
+    bound = int(np.ceil(np.log2(max(lengths)))) + 1
+    assert rep_b.prefill_compiles <= bound, \
+        (rep_b.prefill_compiles, bound)
+    assert rep_u.prefill_compiles == len(set(lengths))
+
+
+def test_bucketing_skipped_for_sliding_window():
+    """SWA ring caches wrap by absolute position — right-padded rows WOULD
+    land in the ring, so bucketing must quietly disable itself and every
+    distinct length compiles its own prefill (correctness over compiles)."""
+    cfg = configs.paper_lm(n_layers=2, d_model=64, n_heads=2, d_ff=96,
+                           vocab=128).replace(
+        tuning=TuningConfig(mode="peqa"),
+        quant=QuantConfig(bits=4, n_grid=2), swa_window=6)
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p, _ = policies.prepare(api.init(rng), cfg, rng)
+    eng = Engine(api, jax.tree.map(jnp.array, p))
+    reqs = [Request(tokens=np.arange(s, dtype=np.int32) % 128, n_new=3)
+            for s in (3, 5, 6)]
+    rep = eng.serve(reqs, ServeConfig(n_slots=2))
+    assert rep.prefill_compiles == 3
+    for i, r in enumerate(reqs):
+        ref = np.asarray(eng.generate(jnp.asarray(r.tokens)[None],
+                                      n_new=r.n_new))
+        assert rep.tokens[i] == list(ref[0, len(r.tokens):]), f"req {i}"
+
+
 def test_report_aggregates_are_derived(setup):
     eng = _engine(setup)
     rep = eng.serve([_req(i=1), _req(i=2)], ServeConfig(n_slots=2))
