@@ -48,6 +48,12 @@
     gate, and an overload arm that must SHED (bounded queue, every
     request accounted served/rejected/shed, served tokens identical to
     the unloaded run).
+  * ScaleBank tiering: 10k on-disk tasks opened LAZILY (gate: zero
+    payload bytes deserialized at init) and served zipfian through the
+    resident scheduler with nonzero virtual tier costs — gates token
+    equality with the eagerly-warmed bank, resident-hit swap p99 under
+    one decode ``step_s``, and a majority of admits landing device/host
+    (the admission-loop prefetcher doing its job).
 
 ``--emit-json DIR`` writes the structured metrics (schema:
 ``repro.serve.telemetry``) to ``DIR/BENCH_kernels.json`` and
@@ -1014,6 +1020,155 @@ def production_serving(report, check: bool = False,
     return ok
 
 
+def scalebank_tiering(report, check: bool = False, n_tasks: int = 10_000,
+                      seed: int = 0) -> bool:
+    """Million-task-shaped ScaleBank: 10k on-disk tasks, zipfian traffic.
+
+    Writes ``n_tasks`` npz task files (one canonical blob copied, with
+    DISTINCT scales for every task the seeded zipfian stream actually
+    touches), opens the bank lazily — the init gate is ZERO payload bytes
+    deserialized — and serves the stream through the resident scheduler
+    with nonzero virtual tier costs, so the admission-loop prefetcher has
+    something to hide.  Deterministic gates (check mode):
+
+      * init touches zero task payload bytes (the lazy-index contract);
+      * token-for-token equality with the same bank eagerly warmed
+        (``warm_all`` — the pre-tiering init behavior);
+      * resident-hit swap p99 / ``step_s`` < 1 on the virtual clock
+        (a device-tier admit must never stall a decode step);
+      * most admits land device/host (the prefetcher is actually hiding
+        the zipf tail's disk loads).
+
+    The budgets are fixed (no EOS), so scheduling — and with it every
+    tier classification — depends only on arrivals and budgets, never on
+    sampled token values: the rows are deterministic and guarded.
+    """
+    import io
+    import os
+    import shutil
+    import tempfile
+
+    from repro.serve import ServeConfig
+    from repro.train.serve import Engine, Request
+
+    cfg = configs.paper_lm(n_layers=1, d_model=32, n_heads=2, d_ff=64,
+                           vocab=64).replace(
+        tuning=TuningConfig(mode="peqa"), quant=QuantConfig(bits=4, n_grid=2))
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p, _ = policies.prepare(api.init(rng), cfg, rng)
+    p = jax.tree.map(np.asarray, p)
+    base_scales = sb.extract_scales(p)
+
+    rngs = np.random.default_rng(seed + 13)
+    n_requests = 48
+    task_ids = (rngs.zipf(1.5, size=n_requests) - 1) % n_tasks
+    tname = lambda i: f"task{i:05d}"
+
+    root = tempfile.mkdtemp(prefix="scalebank_tiering_")
+    ok = True
+    try:
+        buf = io.BytesIO()
+        np.savez(buf, **base_scales)
+        blob = buf.getvalue()
+        t0 = time.perf_counter()
+        for i in range(n_tasks):
+            with open(os.path.join(root, f"{tname(i)}.npz"), "wb") as f:
+                f.write(blob)
+        for i in sorted(set(task_ids)):     # touched tasks get real content
+            bumped = {k: (v * rngs.uniform(0.8, 1.2, v.shape)
+                          ).astype(v.dtype) for k, v in base_scales.items()}
+            with open(os.path.join(root, f"{tname(i)}.npz"), "wb") as f:
+                np.savez(f, **bumped)
+        t_write = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        bank = ScaleBank(root, host_capacity=16)
+        t_open = (time.perf_counter() - t0) * 1e6
+        init_bytes = bank.stats.payload_bytes_loaded
+        if len(bank.tasks) != n_tasks or init_bytes != 0:
+            report("serving/tiering_init", 0.0,
+                   f"FAIL lazy open: {len(bank.tasks)} tasks indexed, "
+                   f"{init_bytes} payload bytes loaded (want {n_tasks}, 0)")
+            ok = False
+
+        reqs = [Request(
+            tokens=(np.arange(6, dtype=np.int32) * (i + 1)) % cfg.vocab_size,
+            n_new=(4, 6, 8)[i % 3], task=tname(task_ids[i]),
+            arrival_s=round(i * 0.7, 6)) for i in range(n_requests)]
+        config = ServeConfig(n_slots=4, scheduler="resident",
+                             resident_tasks=4, prefetch_depth=4,
+                             disk_load_s=0.4, install_s=0.1)
+        eng = Engine(api, jax.tree.map(jnp.asarray, p), bank=bank)
+        eng.serve(reqs, config)                           # compile warmup
+        eng = Engine(api, jax.tree.map(jnp.asarray, p), bank=bank)
+        rep = eng.serve(reqs, config)
+
+        # eager reference: same directory warmed up front (the pre-tiering
+        # behavior) — tokens must match bit-for-bit
+        eager_bank = ScaleBank(root)
+        t0 = time.perf_counter()
+        eager_bank.warm_all()
+        t_warm = time.perf_counter() - t0
+        ref = Engine(api, jax.tree.map(jnp.asarray, p),
+                     bank=eager_bank).serve(reqs, config)
+        tokens_equal = rep.tokens == ref.tokens
+        if not tokens_equal:
+            report("serving/tiering", 0.0,
+                   "FAIL tiered tokens diverge from eager bank")
+            ok = False
+
+        n_adm = rep.tier_device_hits + rep.tier_host_hits \
+            + rep.tier_disk_loads
+        device_rate = rep.tier_device_hits / max(n_adm, 1)
+        warm_rate = (rep.tier_device_hits + rep.tier_host_hits) \
+            / max(n_adm, 1)
+        p99_dev = rep.swap_percentiles("device")["p99"]
+        p99_ratio = p99_dev / config.step_s
+        if p99_ratio >= 1.0:
+            report("serving/tiering", 0.0,
+                   f"FAIL resident-hit swap p99 {p99_dev:.3f}s >= one "
+                   f"decode step ({config.step_s}s)")
+            ok = False
+        if check and warm_rate < 0.5:
+            report("serving/tiering", 0.0,
+                   f"FAIL prefetcher hid too little: only "
+                   f"{warm_rate:.0%} of admits device/host")
+            ok = False
+
+        report("serving/tiering", t_open,
+               f"{n_tasks} tasks open={t_open:.0f}us (write={t_write:.1f}s "
+               f"warm_all={t_warm:.1f}s) init_payload={init_bytes}B "
+               f"admits: device={rep.tier_device_hits} "
+               f"host={rep.tier_host_hits} disk={rep.tier_disk_loads} "
+               f"hidden={rep.prefetch_hidden_s:g}s "
+               f"swap_p99_device={p99_dev:g}s "
+               f"bank_loads={rep.bank_disk_loads} "
+               f"evictions={rep.bank_host_evictions} "
+               f"tokens==eager: {tokens_equal}")
+        metric("serving/tiering_open", t_open, "us", wall=True,
+               n_tasks=n_tasks, warm_all_s=t_warm)
+        metric("serving/tiering_init_payload_bytes", init_bytes, "B",
+               guard=("lower", 0.0))
+        metric("serving/tiering_token_equal", int(tokens_equal), "bool",
+               guard=("higher", 0.0))
+        metric("serving/tiering_resident_swap_p99_ratio",
+               round(p99_ratio, 9), "x_step", guard=("lower", 0.0))
+        metric("serving/tiering_device_rate", round(device_rate, 6),
+               "frac", guard=("higher", 0.15),
+               host_hits=rep.tier_host_hits,
+               disk_loads=rep.tier_disk_loads,
+               prefetch_issued=rep.prefetch_issued)
+        metric("serving/tiering_warm_rate", round(warm_rate, 6), "frac",
+               guard=("higher", 0.15))
+        metric("serving/tiering_hidden_s", round(rep.prefetch_hidden_s, 9),
+               "s", guard=("higher", 0.15),
+               swap_wait_total_s=round(rep.swap_wait_total_s, 9))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return ok
+
+
 def run(report, traffic_kind: str = "poisson", seed: int = 0):
     traffic_model(report)
     gemv_roofline(report)
@@ -1026,6 +1181,7 @@ def run(report, traffic_kind: str = "poisson", seed: int = 0):
     sharded_speculative(report)
     family_serving(report)
     production_serving(report, traffic_kind=traffic_kind, seed=seed)
+    scalebank_tiering(report, seed=seed)
 
 
 if __name__ == "__main__":
@@ -1040,8 +1196,9 @@ if __name__ == "__main__":
                          "all-gathers / bubble steps / bytes-per-token "
                          "regression / task-drain idle under the resident "
                          "scheduler / speculative-vs-greedy token mismatch "
-                         "or target-step ratio < 1.3x (the serve-smoke CI "
-                         "gate)")
+                         "or target-step ratio < 1.3x / tiered-bank init "
+                         "payload bytes != 0 or tiered-vs-eager token "
+                         "mismatch (the serve-smoke CI gate)")
     ap.add_argument("--emit-json", metavar="DIR", default=None,
                     help="write BENCH_kernels.json and BENCH_serving.json "
                          "into DIR (CI artifacts)")
@@ -1066,6 +1223,8 @@ if __name__ == "__main__":
         passed = production_serving(_report, check=True,
                                     traffic_kind=args.traffic,
                                     seed=args.seed) and passed
+        passed = scalebank_tiering(_report, check=True,
+                                   seed=args.seed) and passed
         if args.emit_json:
             emit_json(args.emit_json)
         print(f"[check-sharded] {'OK' if passed else 'FAILED'}")

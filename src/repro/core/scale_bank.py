@@ -17,6 +17,9 @@ a swap never holds two copies of anything bigger than one scale set.
 from __future__ import annotations
 
 import os
+import warnings
+from collections import OrderedDict
+from collections.abc import MutableMapping
 from typing import Dict, Iterable, List, Optional, Sequence
 
 import jax
@@ -26,6 +29,25 @@ import numpy as np
 from repro.core.treepath import path_str as _path_str
 
 SCALE_KEYS = ("scale", "zero")
+
+
+def task_stack_dim(rank: int) -> int:
+    """Axis the task dim occupies when stacking a scale leaf of ``rank``.
+
+    Scale leaves always end in an (out, G) pair — per-layer ``(out, G)``
+    or stacked-over-layers ``(L, out, G)`` — so the task dim sits at
+    ``rank - 2``, just before that pair.  ``stack_scales`` (building the
+    stack) and ``_stack_row_install`` (writing one task's row back into
+    it) MUST agree on this axis; both route through here.  A rank < 2
+    leaf has no (out, G) pair to sit behind — the old
+    ``max(0, rank - 2)`` / ``ndim - 3`` pair silently disagreed there
+    (row installs landed on the wrong axis), so refuse it loudly.
+    """
+    if rank < 2:
+        raise ValueError(
+            f"scale leaf of rank {rank} cannot carry a task dim: scale "
+            f"leaves must end in an (out, G) pair (rank >= 2)")
+    return rank - 2
 
 
 def extract_scales(params: dict, include_zero: bool = False) -> Dict[str, np.ndarray]:
@@ -161,7 +183,7 @@ def stack_scales(base: Dict[str, np.ndarray],
                 raise ValueError(f"scale shape mismatch at {path}: "
                                  f"{a.shape} vs {b.shape}")
             rows.append(a)
-        flat[path] = np.stack(rows, axis=max(0, b.ndim - 2))
+        flat[path] = np.stack(rows, axis=task_stack_dim(b.ndim))
     return _nest_paths(flat)
 
 
@@ -172,7 +194,7 @@ def _stack_row_install(stack: dict, rows: dict, idx) -> dict:
     contain zero collectives; ``idx`` is traced, so LRU rotation never
     recompiles."""
     def upd(dst, src):
-        ax = dst.ndim - 3          # the task dim sits before (out, G)
+        ax = task_stack_dim(src.ndim)   # same axis stack_scales stacked on
         starts = [jnp.int32(0)] * dst.ndim
         starts[ax] = jnp.int32(idx)
         return jax.lax.dynamic_update_slice(
@@ -208,6 +230,19 @@ class ResidentStack:
         # host snapshot NOW: params' scale buffers may later be donated away
         # by switch_task installs
         self._base = extract_scales(params, include_zero=True)
+        warm = list(warm)
+        if len(set(warm)) != len(warm):
+            dupes = sorted({w for w in warm if warm.count(w) > 1})
+            raise ValueError(
+                f"ResidentStack: duplicate warm task(s) {dupes} — a "
+                f"duplicated warm name would occupy two rows but only the "
+                f"first is ever looked up, leaving a dead row for the "
+                f"stack's lifetime")
+        unknown = [w for w in warm if w not in bank.tasks]
+        if unknown:
+            warnings.warn(
+                f"ResidentStack: dropping warm task(s) {unknown} not in "
+                f"the bank", RuntimeWarning, stacklevel=2)
         warm = [w for w in warm if w in bank.tasks][: self.capacity]
         self.names: List[Optional[str]] = (
             warm + [None] * (self.capacity - len(warm)))
@@ -283,36 +318,227 @@ class ResidentStack:
             astack, arows, aidx).compile().as_text()
 
 
-class ScaleBank:
-    """In-memory + on-disk store of per-task scale sets."""
+class TaskStoreStats:
+    """Cumulative counters for one ``_TaskStore`` (reset never; callers
+    snapshot and diff).  ``payload_bytes_loaded`` is the total npz payload
+    deserialized from disk — ZERO right after ``ScaleBank(root)`` opens,
+    however many tasks sit on disk (the lazy-init contract the tiering
+    bench gates)."""
 
-    def __init__(self, root: str | None = None):
+    def __init__(self):
+        self.host_hits = 0          # __getitem__ served from the host tier
+        self.disk_loads = 0         # npz payloads deserialized on demand
+        self.host_evictions = 0     # disk-backed sets dropped under pressure
+        self.payload_bytes_loaded = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"host_hits": self.host_hits, "disk_loads": self.disk_loads,
+                "host_evictions": self.host_evictions,
+                "payload_bytes_loaded": self.payload_bytes_loaded}
+
+
+class _TaskStore(MutableMapping):
+    """Tier 1 + tier 2 of the bank: bounded host LRU over deserialized
+    scale sets, backed by a lazy disk index.
+
+    ``__contains__`` / ``__len__`` / ``__iter__`` answer from the INDEX
+    (filenames scanned once at init) — no payload touches.  ``store[name]``
+    is the promotion path: host hit (LRU touch) or disk load (deserialize,
+    insert, evict the least-recently-used DISK-BACKED set past
+    ``host_capacity``).  Sets assigned directly (``store[name] = scales``
+    with no backing file) are never evicted — they cannot be reloaded.
+
+    A file that fails to deserialize quarantines THAT task (dropped from
+    the index with a warning, ``KeyError`` on access) instead of refusing
+    the whole bank — one crashed half-written ``add`` must not take every
+    other task down with it.
+    """
+
+    def __init__(self, root: Optional[str] = None,
+                 host_capacity: Optional[int] = None):
         self.root = root
-        self.tasks: Dict[str, Dict[str, np.ndarray]] = {}
+        self.host_capacity = host_capacity
+        # host tier, least-recently-used first (move_to_end on touch)
+        self._host: "OrderedDict[str, Dict[str, np.ndarray]]" = OrderedDict()
+        self._disk: Dict[str, str] = {}        # name -> npz path (tier 2)
+        self.quarantined: Dict[str, str] = {}  # name -> load error
+        self.stats = TaskStoreStats()
         if root:
             os.makedirs(root, exist_ok=True)
             for f in sorted(os.listdir(root)):
                 if f.endswith(".npz"):
-                    self.tasks[f[:-4]] = self._load_npz(os.path.join(root, f))
+                    self._disk[f[:-4]] = os.path.join(root, f)
 
-    @staticmethod
-    def _load_npz(path: str) -> Dict[str, np.ndarray]:
-        """Load one task file, CLOSING the archive: a bare
-        ``dict(np.load(path))`` keeps the NpzFile handle open for the life
-        of the process — one leaked fd per task on disk."""
+    # ---------------------------------------------------------- mapping
+    def __contains__(self, name) -> bool:
+        return name in self._host or name in self._disk
+
+    def __len__(self) -> int:
+        n = len(self._disk)
+        return n + sum(1 for k in self._host if k not in self._disk)
+
+    def __iter__(self):
+        yield from self._disk
+        yield from (k for k in self._host if k not in self._disk)
+
+    def __getitem__(self, name: str) -> Dict[str, np.ndarray]:
+        if name in self._host:
+            self._host.move_to_end(name)
+            self.stats.host_hits += 1
+            return self._host[name]
+        self.load(name)
+        return self._host[name]
+
+    def __setitem__(self, name: str, scales: Dict[str, np.ndarray]):
+        self._host[name] = scales
+        self._host.move_to_end(name)
+        self.quarantined.pop(name, None)
+        self._evict()
+
+    def __delitem__(self, name: str):
+        found = name in self._host or name in self._disk
+        self._host.pop(name, None)
+        self._disk.pop(name, None)      # drops the index entry, not the file
+        if not found:
+            raise KeyError(name)
+
+    # ---------------------------------------------------------- tiering
+    def loaded(self, name: str) -> bool:
+        """Host-resident (tier 1 or unbacked) — answers without loading."""
+        return name in self._host
+
+    def load(self, name: str, path: Optional[str] = None) -> None:
+        """Promote ``name`` disk→host (no-op when already host-resident).
+
+        A corrupt/unreadable file quarantines the task: warning, dropped
+        from the disk index, ``KeyError`` — the rest of the bank serves on.
+        """
+        if name in self._host:
+            return
+        if path is None:
+            if name not in self._disk:
+                raise KeyError(name)
+            path = self._disk[name]
         try:
             with np.load(path) as z:
-                return {k: z[k] for k in z.files}
+                # eager reads, then CLOSE: a bare dict(np.load(path)) keeps
+                # the NpzFile handle open for the life of the process — one
+                # leaked fd per task touched
+                scales = {k: z[k] for k in z.files}
         except Exception as e:
-            raise ValueError(
-                f"ScaleBank: corrupt or unreadable task file {path!r}: "
-                f"{e}") from e
+            self.quarantined[name] = str(e)
+            self._disk.pop(name, None)
+            warnings.warn(
+                f"ScaleBank: quarantining task {name!r} — corrupt or "
+                f"unreadable file {path!r}: {e}", RuntimeWarning,
+                stacklevel=2)
+            raise KeyError(
+                f"task {name!r} quarantined: corrupt or unreadable file "
+                f"{path!r}: {e}") from e
+        self.stats.disk_loads += 1
+        self.stats.payload_bytes_loaded += sum(
+            a.nbytes for a in scales.values())
+        self._host[name] = scales
+        self._host.move_to_end(name)
+        self._evict()
+
+    def _evict(self) -> None:
+        """Shrink the host tier to ``host_capacity``, LRU-first, skipping
+        unbacked sets (no file to reload them from) and the most recent
+        entry (the one the caller is about to use)."""
+        if self.host_capacity is None:
+            return
+        while len(self._host) > self.host_capacity:
+            victim = next(
+                (k for k in self._host
+                 if k in self._disk and k != next(reversed(self._host))),
+                None)
+            if victim is None:
+                return
+            del self._host[victim]
+            self.stats.host_evictions += 1
+
+
+class ScaleBank:
+    """Tiered per-task scale store: bounded host cache over a lazy disk
+    index (plus the device tier, ``ResidentStack``, built on top).
+
+    ``ScaleBank(root)`` scans FILENAMES only — opening a bank with a
+    million task files touches zero task payloads.  ``bank.tasks`` keeps
+    its dict shape (``in`` / ``len`` / iteration answer from the index;
+    ``bank.tasks[name]`` promotes disk→host on demand), so pre-tiering
+    callers and direct ``bank.tasks[name] = scales`` injection still work.
+    ``host_capacity`` bounds tier 1 (LRU over deserialized sets; ``None``
+    = unbounded, the pre-tiering memory behavior once everything has been
+    touched).
+    """
+
+    def __init__(self, root: str | None = None,
+                 host_capacity: Optional[int] = None):
+        self.root = root
+        self.tasks = _TaskStore(root, host_capacity=host_capacity)
+
+    @property
+    def host_capacity(self) -> Optional[int]:
+        return self.tasks.host_capacity
+
+    @host_capacity.setter
+    def host_capacity(self, cap: Optional[int]):
+        self.tasks.host_capacity = cap
+        self.tasks._evict()
+
+    @property
+    def stats(self) -> TaskStoreStats:
+        return self.tasks.stats
+
+    @property
+    def quarantined(self) -> Dict[str, str]:
+        return self.tasks.quarantined
+
+    def loaded(self, name: str) -> bool:
+        """Host-resident already?  Never triggers a load."""
+        return self.tasks.loaded(name)
+
+    def prefetch(self, name: str) -> bool:
+        """Warm ``name`` disk→host ahead of use.  True when the task is
+        host-resident after the call; False (no raise) when it is unknown
+        or quarantines on load — the prefetch path must never take the
+        serving loop down for a task that may get shed anyway."""
+        try:
+            self.tasks.load(name)
+        except KeyError:
+            return False
+        return True
+
+    def warm_all(self) -> int:
+        """Eagerly load every indexed task (the pre-tiering init behavior;
+        quarantined files are skipped with their warning).  Returns the
+        number of tasks host-resident afterwards — the tiered-vs-eager
+        equality tests serve from a bank warmed through here."""
+        for name in list(self.tasks._disk):
+            self.prefetch(name)
+        return sum(1 for _ in self.tasks)
 
     def add(self, name: str, params: dict, include_zero: bool = False):
         scales = extract_scales(params, include_zero)
         self.tasks[name] = scales
         if self.root:
-            np.savez(os.path.join(self.root, f"{name}.npz"), **scales)
+            path = os.path.join(self.root, f"{name}.npz")
+            tmp = f"{path}.tmp.{os.getpid()}"
+            try:
+                # write-then-rename: np.savez straight to the final path
+                # would leave a truncated npz if the process dies mid-write,
+                # poisoning every later ScaleBank(root) open of this task.
+                # savez gets the open handle, not the name — handed a str
+                # it appends ".npz", and the tmp name must stay outside
+                # what the init scan indexes
+                with open(tmp, "wb") as f:
+                    np.savez(f, **scales)
+                os.replace(tmp, path)
+            finally:
+                if os.path.exists(tmp):
+                    os.remove(tmp)
+            self.tasks._disk[name] = path
 
     def switch(self, params: dict, name: str,
                ctx=None, donate: bool = False) -> dict:

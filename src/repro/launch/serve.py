@@ -170,7 +170,11 @@ def run_continuous(engine, cfg, args, tasks):
             n_new=(max(2, args.n_new // 2), args.n_new, 2 * args.n_new))
         print(f"[serve] traffic: {meta}")
     config = ServeConfig(n_slots=args.batch, scheduler=args.scheduler,
-                         spec_k=args.spec_k, draft_bits=args.draft_bits)
+                         spec_k=args.spec_k, draft_bits=args.draft_bits,
+                         prefetch_depth=args.prefetch_depth,
+                         host_cache_tasks=args.host_cache or None,
+                         disk_load_s=args.disk_load_s,
+                         install_s=args.install_s)
     rep, summary = driver.run(engine, reqs, config)
     dropped = [i for i, t in enumerate(rep.tokens) if t is None]
     for i, (r, m) in enumerate(zip(reqs, rep.requests)):
@@ -191,6 +195,14 @@ def run_continuous(engine, cfg, args, tasks):
     print("[serve] slo: " + " ".join(
         f"{k}_p50={slo[k]['p50']:g} {k}_p99={slo[k]['p99']:g}"
         for k in ("ttft_s", "tpot_s", "e2e_s")))
+    if rep.tier_device_hits + rep.tier_host_hits + rep.tier_disk_loads:
+        print(f"[serve] tiers: device={rep.tier_device_hits} "
+              f"host={rep.tier_host_hits} disk={rep.tier_disk_loads} "
+              f"prefetch_issued={rep.prefetch_issued} "
+              f"hidden={rep.prefetch_hidden_s:g}s "
+              f"swap_wait_total={rep.swap_wait_total_s:g}s "
+              f"bank_loads={rep.bank_disk_loads} "
+              f"bank_evictions={rep.bank_host_evictions}")
     ok = not dropped and rep.bubble_slot_steps == 0 and all(
         out is not None and len(out) == r.n_new
         for r, out in zip(reqs, rep.tokens))
@@ -284,6 +296,23 @@ def main():
     ap.add_argument("--draft-bits", type=int, default=None,
                     help="speculative: draft plane-prefix width "
                          "(default bits-1)")
+    ap.add_argument("--bank-root", default="",
+                    help="persist tuned task scales as npz files here and "
+                         "serve through the TIERED bank: the serving bank "
+                         "re-opens this directory lazily (filename index "
+                         "only) and promotes tasks disk→host→device on "
+                         "demand / via the serve loop's prefetcher")
+    ap.add_argument("--host-cache", type=int, default=0,
+                    help="tiered bank: max deserialized scale sets held in "
+                         "the host LRU tier (0 = unbounded)")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="continuous serving: distinct upcoming tasks the "
+                         "admission loop warms ahead each iteration "
+                         "(0 disables prefetch)")
+    ap.add_argument("--disk-load-s", type=float, default=0.0,
+                    help="virtual seconds one disk→host task load costs")
+    ap.add_argument("--install-s", type=float, default=0.0,
+                    help="virtual seconds one host→device install costs")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
@@ -299,7 +328,7 @@ def main():
     if args.family_smoke:
         engine = Engine(api, jax.tree.map(jnp.array, backbone))
         raise SystemExit(0 if run_family_smoke(engine, cfg, args) else 1)
-    bank = ScaleBank()
+    bank = ScaleBank(root=args.bank_root or None)
 
     for i, task in enumerate(args.tasks.split(",")):
         toks = synthetic.corpus(cfg.vocab_size, 60_000, seed=17 * (i + 1))
@@ -316,6 +345,15 @@ def main():
         bank.add(task, state["params"])
         print(f"[serve] tuned {task}: scale payload "
               f"{bank.nbytes(task):,} B")
+    if args.bank_root:
+        # serve through the TIERED path: re-open the directory lazily (the
+        # index scan touches zero payloads) so disk→host→device promotion
+        # and the admission-loop prefetcher actually exercise
+        bank = ScaleBank(root=args.bank_root,
+                         host_capacity=args.host_cache or None)
+        print(f"[serve] tiered bank: {len(bank.tasks)} tasks indexed at "
+              f"{args.bank_root!r}, "
+              f"{bank.stats.payload_bytes_loaded} payload bytes loaded")
 
     ctx = None
     if args.mesh:

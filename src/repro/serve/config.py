@@ -55,6 +55,22 @@ class ServeConfig:
     Wall-clock arrivals (``Request.arrival_s``) are compared against this
     clock; step-clock arrivals (``arrival_step``) gate on pool steps
     directly, so pre-harness workloads replay bit-identically.
+
+    Tiered ScaleBank (docs/SERVING.md "Tiered ScaleBank"):
+      * ``prefetch_depth`` — how many distinct upcoming tasks the serve
+        loop warms ahead of admission each iteration (wait queue first,
+        then pending arrivals).  0 disables prefetch; every cold task
+        then pays its full tier costs at admit.
+      * ``host_cache_tasks`` — tier-1 capacity applied to the engine's
+        bank for the run (LRU over deserialized scale sets); ``None``
+        leaves the bank's own bound untouched.
+      * ``disk_load_s`` — virtual seconds one tier-2→tier-1 npz load
+        costs (loads serialize on one virtual disk lane).
+      * ``install_s`` — virtual seconds one tier-1→tier-0 install costs
+        (resident row write, or the drain path's scale swap).
+    Both costs default to 0 so pre-tiering workloads replay
+    bit-identically; the serve loop charges only the remainder a prefetch
+    failed to hide (``RequestMetrics.swap_wait_s``).
     """
     n_slots: int = 4
     cache_len: Optional[int] = None
@@ -66,6 +82,10 @@ class ServeConfig:
     prefill_s: Optional[float] = None
     spec_k: int = 2
     draft_bits: Optional[int] = None
+    prefetch_depth: int = 2
+    host_cache_tasks: Optional[int] = None
+    disk_load_s: float = 0.0
+    install_s: float = 0.0
     # round admitted prompts up to power-of-two lengths (masked padding):
     # a mixed trace compiles O(log max_len) prefill variants instead of one
     # per distinct length.  Token streams are unchanged — padded rows are
@@ -99,6 +119,16 @@ class ServeConfig:
         if self.draft_bits is not None and self.draft_bits < 1:
             raise ValueError(
                 f"draft_bits={self.draft_bits} must be >= 1")
+        if self.prefetch_depth < 0:
+            raise ValueError(
+                f"prefetch_depth={self.prefetch_depth} must be >= 0")
+        if self.host_cache_tasks is not None and self.host_cache_tasks < 1:
+            raise ValueError(
+                f"host_cache_tasks={self.host_cache_tasks} must be >= 1")
+        if self.disk_load_s < 0:
+            raise ValueError(f"disk_load_s={self.disk_load_s} must be >= 0")
+        if self.install_s < 0:
+            raise ValueError(f"install_s={self.install_s} must be >= 0")
 
     @property
     def admit_cost_s(self) -> float:

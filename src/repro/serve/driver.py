@@ -68,6 +68,13 @@ def summarize(report: ServeReport, wall_s: Optional[float] = None) -> Dict:
         "acceptance_rate": report.acceptance_rate,
         "tok_per_target_step": (report.decoded / report.steps
                                 if report.steps else 0.0),
+        "tier_device_hits": report.tier_device_hits,
+        "tier_host_hits": report.tier_host_hits,
+        "tier_disk_loads": report.tier_disk_loads,
+        "prefetch_issued": report.prefetch_issued,
+        "prefetch_hidden_s": report.prefetch_hidden_s,
+        "swap_wait_total_s": report.swap_wait_total_s,
+        "swap_device_p99_s": report.swap_percentiles("device")["p99"],
         "slo": report.slo(),
         "wall_s": wall,
         "tok_s_wall": served_tokens / wall if wall > 0 else 0.0,
@@ -105,5 +112,18 @@ def log_summary(sink: MetricSink, summary: Dict, *,
                  round(summary["tok_per_target_step"], 6), "tok/step",
                  guard=("higher", SLO_GUARD_BAND))
         sink.log(f"{base}_draft_steps", summary["draft_steps"], "steps")
+    tier_total = (summary["tier_device_hits"] + summary["tier_host_hits"]
+                  + summary["tier_disk_loads"])
+    if tier_total:
+        # tiered-bank admits ran: per-tier counts are informational (the
+        # tiering bench emits its own guarded hit-rate/swap-p99 rows);
+        # the charged swap total is virtual-clock deterministic → guarded
+        # like the SLO percentiles
+        for key in ("tier_device_hits", "tier_host_hits",
+                    "tier_disk_loads", "prefetch_issued"):
+            sink.log(f"{base}_{key}", summary[key], "req")
+        sink.log(f"{base}_swap_wait_total_s",
+                 round(summary["swap_wait_total_s"], 9), "s",
+                 guard=("lower", SLO_GUARD_BAND))
     sink.log(f"{base}_tok_s", round(summary["tok_s_wall"], 3), "tok/s",
              wall=True)

@@ -46,6 +46,15 @@ class RequestMetrics:
     # tokens this request's slot proposed / the target verify accepted
     draft_proposed: int = 0
     draft_accepted: int = 0
+    # tiered ScaleBank (tasked requests through a bank; None otherwise):
+    # which tier held the task's scales when the request reached the head
+    # of the queue — "device" (resident row, zero swap bytes), "host"
+    # (deserialized set, row install needed) or "disk" (payload had to
+    # come off the virtual disk lane) — and the virtual seconds of swap
+    # cost the prefetcher FAILED to hide, charged between queue exit and
+    # prefill start (so it shows up in queue_wait_s, not ttft alone)
+    scale_tier: Optional[str] = None
+    swap_wait_s: float = 0.0
 
     @property
     def n_generated(self) -> int:
@@ -138,6 +147,16 @@ class ServeReport:
     # decoded / steps is the accepted-tokens-per-target-step headline
     draft_steps: int = 0
     resident_installs: int = 0         # stack rows (re)installed this serve
+    # tiered ScaleBank: per-admitted-request tier of the task's scales at
+    # the head of the queue (see RequestMetrics.scale_tier), prefetcher
+    # activity, and the real store's counter deltas over this serve
+    tier_device_hits: int = 0
+    tier_host_hits: int = 0
+    tier_disk_loads: int = 0
+    prefetch_issued: int = 0           # loads+installs the prefetcher ran
+    prefetch_hidden_s: float = 0.0     # virtual swap cost hidden by overlap
+    bank_disk_loads: int = 0           # real npz deserializations this serve
+    bank_host_evictions: int = 0       # real tier-1 LRU evictions this serve
     # distinct prefill/admit shapes this run traced (bucketed prompt length
     # × prefix rows × padded-or-not) — the compile count prompt-length
     # bucketing exists to bound (O(log max_len) instead of O(lengths))
@@ -177,6 +196,22 @@ class ServeReport:
         """Aggregate accepted/proposed draft tokens (None off speculative)."""
         prop = self.draft_proposed
         return None if prop == 0 else self.draft_accepted / prop
+
+    @property
+    def swap_wait_total_s(self) -> float:
+        """Total virtual swap seconds charged (the unhidden remainder)."""
+        return sum(m.swap_wait_s for m in self.requests)
+
+    def swap_percentiles(self, tier: Optional[str] = None,
+                         qs: Sequence[int] = DEFAULT_QUANTILES
+                         ) -> Dict[str, float]:
+        """Percentiles of ``swap_wait_s`` over served tasked requests,
+        optionally restricted to one ``scale_tier`` — the tiering bench
+        gates the "device" (resident-hit) p99 against one ``step_s``."""
+        vals = [m.swap_wait_s for m in self.requests
+                if m.status == SERVED and m.scale_tier is not None
+                and (tier is None or m.scale_tier == tier)]
+        return percentiles(vals, qs)
 
     def slo(self, qs: Sequence[int] = DEFAULT_QUANTILES) -> Dict[str, Dict]:
         return slo_summary(self.requests, qs)

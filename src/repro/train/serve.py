@@ -1018,6 +1018,24 @@ class Engine:
         peak_queue = 0
         now = 0.0                       # virtual seconds
         eps = 1e-9
+        # --- tiered-bank bookkeeping (docs/SERVING.md "Tiered ScaleBank").
+        # Real byte movement (npz deserialize, stack-row install) runs
+        # eagerly at issue time; the VIRTUAL clock models each move's cost
+        # (``disk_load_s`` on one serialized disk lane, ``install_s`` per
+        # row write) and charges a request only the remainder the
+        # prefetcher failed to hide before it reached the head.
+        bank = self.bank
+        tiering = bank is not None and hasattr(bank, "stats")
+        if tiering and cfg.host_cache_tasks is not None:
+            bank.host_capacity = cfg.host_cache_tasks
+        stats0 = bank.stats.as_dict() if tiering else {}
+        vhost_ready: dict = {}      # task -> virtual host-resident time
+        vdev_ready: dict = {}       # task -> virtual resident-row-ready time
+        disk_lane = 0.0             # virtual disk busy-until
+        pf_cost: dict = {}          # task -> unattributed prefetch spend
+        tier_hits = {"device": 0, "host": 0, "disk": 0}
+        prefetch_issued = 0
+        prefetch_hidden = 0.0
         t0 = time.perf_counter()
 
         def due(rid: int) -> bool:
@@ -1044,6 +1062,77 @@ class Engine:
             m.status = SERVED
             m.finish_s = now
 
+        def host_was_ready(t: str) -> bool:
+            """Payload host-resident AND virtually landed by ``now``?"""
+            return (bank.loaded(t)
+                    and vhost_ready.get(t, 0.0) <= now + eps)
+
+        def host_ready(t: str) -> float:
+            """Virtual time ``t``'s payload is host-resident, issuing the
+            real disk load (and its lane slot) when it is not.  Idempotent
+            — an entry evicted from the host tier after a prefetch (the
+            prefetch-then-evict race) just reloads on the lane."""
+            nonlocal disk_lane
+            if bank.loaded(t):
+                return max(0.0, vhost_ready.get(t, 0.0))
+            bank.prefetch(t)    # a quarantined/unknown task surfaces as
+            # KeyError at the ensure/switch below, not here
+            start = max(now, disk_lane)
+            disk_lane = start + cfg.disk_load_s
+            vhost_ready[t] = disk_lane
+            return disk_lane
+
+        def attribute_swap(m, tier: str, wait: float) -> None:
+            """Meter one admit's tier + charged swap remainder, crediting
+            the prefetcher for whatever it hid."""
+            nonlocal now, prefetch_hidden
+            spent = pf_cost.pop(m.task, 0.0)
+            prefetch_hidden += max(0.0, spent - wait)
+            tier_hits[tier] += 1
+            m.scale_tier = tier
+            m.swap_wait_s = wait
+            now += wait
+
+        def prefetch_tick() -> None:
+            """Warm the next ``prefetch_depth`` distinct upcoming tasks
+            (wait queue first, then pending arrivals): disk→host on the
+            virtual lane, then host→device once the payload has virtually
+            landed (resident scheduler only).  Runs between admissions and
+            the decode step, so the costs it books overlap decode/idle
+            time — the admit path charges only what is still in flight."""
+            nonlocal disk_lane, prefetch_issued
+            if not tiering or cfg.prefetch_depth == 0:
+                return
+            upcoming: List[str] = []
+            for rid in (*waitq, *arrivals):
+                t = requests[rid].task
+                if t is not None and t not in upcoming:
+                    upcoming.append(t)
+                if len(upcoming) >= cfg.prefetch_depth:
+                    break
+            for t in upcoming:
+                if t not in bank.tasks:     # unknown or quarantined
+                    continue
+                if not bank.loaded(t):
+                    if not bank.prefetch(t):
+                        continue            # quarantined on this very load
+                    start = max(now, disk_lane)
+                    disk_lane = start + cfg.disk_load_s
+                    vhost_ready[t] = disk_lane
+                    pf_cost[t] = pf_cost.get(t, 0.0) + cfg.disk_load_s
+                    prefetch_issued += 1
+                if (use_resident and t not in resident.names
+                        and vhost_ready.get(t, 0.0) <= now + eps):
+                    # pin in-flight tasks AND the other upcoming ones, so a
+                    # deep prefetch window never thrashes its own rows
+                    pinned = {pool.task[s]
+                              for s in np.flatnonzero(pool.active)}
+                    pinned |= set(upcoming) - {t}
+                    if resident.ensure(t, pinned=pinned) is not None:
+                        vdev_ready[t] = now + cfg.install_s
+                        pf_cost[t] = pf_cost.get(t, 0.0) + cfg.install_s
+                        prefetch_issued += 1
+
         while arrivals or waitq or pool.n_active():
             # 1. arrivals whose time has come enter the wait queue
             while arrivals and due(arrivals[0]):
@@ -1062,9 +1151,24 @@ class Engine:
                     break
                 req = requests[rid]
                 if use_resident:
+                    t = req.task
                     pinned = {pool.task[s]
                               for s in np.flatnonzero(pool.active)}
-                    row = resident.ensure(req.task, pinned=pinned)
+                    if t in resident.names:
+                        # row already installed (warm start, earlier admit,
+                        # or the prefetcher); charge only an install still
+                        # virtually in flight — a true DEVICE hit waits 0
+                        wait = max(0.0, vdev_ready.get(t, 0.0) - now)
+                        tier = "device" if wait <= eps else "host"
+                        row = resident.ensure(t, pinned=pinned)  # LRU touch
+                    else:
+                        was_host = tiering and host_was_ready(t)
+                        hr = host_ready(t) if tiering else now
+                        row = resident.ensure(t, pinned=pinned)
+                        if row is not None:
+                            wait = max(0.0, hr - now) + cfg.install_s
+                            tier = "host" if was_host else "disk"
+                            vdev_ready[t] = now + wait
                     if row is None:         # every row pinned by in-flight
                         blocked_by_task = True
                         break
@@ -1072,6 +1176,7 @@ class Engine:
                     # (prefill_slotted) — a task change at admit moves ZERO
                     # scale bytes host→device and the pool never drains
                     waitq.popleft()
+                    attribute_swap(m, tier, wait)
                     m.admit_s = now
                     now += admit_cost
                     slot = self.admit(pool, req, rid=rid, task_row=row,
@@ -1080,14 +1185,25 @@ class Engine:
                     pool.tid[slot] = row
                     pool._dev = None
                 else:
+                    tier = None
+                    wait = 0.0
                     if (req.task is not None and self.bank is not None
                             and req.task != self.current_task):
                         if pool.n_active():
                             blocked_by_task = True
                             break           # drain, then swap scales once
+                        if tiering:
+                            was_host = host_was_ready(req.task)
+                            hr = host_ready(req.task)
+                            wait = max(0.0, hr - now) + cfg.install_s
+                            tier = "host" if was_host else "disk"
                         self.switch_task(req.task)
                         switches += 1
+                    elif req.task is not None and tiering:
+                        tier = "device"     # scales already live — no swap
                     waitq.popleft()
+                    if tier is not None:
+                        attribute_swap(m, tier, wait)
                     m.admit_s = now
                     now += admit_cost
                     slot = self.admit(pool, req, rid=rid,
@@ -1102,6 +1218,10 @@ class Engine:
                 while len(waitq) > cfg.queue_bound:
                     metrics[waitq.pop()].status = REJECTED
             peak_queue = max(peak_queue, len(waitq))
+            # 3b. warm upcoming tasks' tiers while the pool decodes (or the
+            #     clock jumps) — the swap cost a request pays at the head
+            #     is only whatever of this is still in flight
+            prefetch_tick()
             # 4. advance: decode if anything is live, else jump the clock
             #    to the next arrival
             if pool.n_active() == 0:
@@ -1143,6 +1263,16 @@ class Engine:
             resident_installs=(resident.installs - installs0
                                if use_resident else 0),
             prefill_compiles=len(pool._prefill_keys),
+            tier_device_hits=tier_hits["device"],
+            tier_host_hits=tier_hits["host"],
+            tier_disk_loads=tier_hits["disk"],
+            prefetch_issued=prefetch_issued,
+            prefetch_hidden_s=prefetch_hidden,
+            bank_disk_loads=(bank.stats.disk_loads - stats0["disk_loads"]
+                             if tiering else 0),
+            bank_host_evictions=(
+                bank.stats.host_evictions - stats0["host_evictions"]
+                if tiering else 0),
             scheduler=sched_name, peak_queue_depth=peak_queue, config=cfg)
 
     # ------------------------------------------------------------ introspect

@@ -113,8 +113,9 @@ def test_switch_unknown_task_raises():
 def test_load_closes_npz_handles(tmp_path, monkeypatch):
     """``dict(np.load(path))`` kept the NpzFile open for the life of the
     process — one leaked fd per task on disk.  Track every handle np.load
-    hands out during a disk load and require each one CLOSED (fid/zip are
-    nulled by NpzFile.close) by the time the bank is constructed."""
+    hands out and require (a) ZERO opened at construction (lazy disk
+    index) and (b) each one CLOSED (fid/zip are nulled by NpzFile.close)
+    once the on-demand load has run."""
     params = _tiny_peqa_params()
     bank = ScaleBank(root=str(tmp_path))
     bank.add("base", params)
@@ -131,18 +132,65 @@ def test_load_closes_npz_handles(tmp_path, monkeypatch):
     monkeypatch.setattr(np, "load", tracking_load)
     loaded = ScaleBank(root=str(tmp_path))
     assert set(loaded.names()) == {"base", "taskA"}
-    assert len(handles) == 2
-    for h in handles:
-        assert h.zip is None and h.fid is None, "NpzFile left open"
+    assert len(handles) == 0, "lazy init must not touch task payloads"
     # and the arrays survived the close (materialised, not lazy views)
     for path, a in bank.tasks["taskA"].items():
         np.testing.assert_array_equal(loaded.tasks["taskA"][path], a)
+    assert len(handles) == 1
+    for h in handles:
+        assert h.zip is None and h.fid is None, "NpzFile left open"
 
 
-def test_corrupt_npz_names_offending_path(tmp_path):
+def test_corrupt_npz_quarantines_one_task(tmp_path):
+    """A corrupt file must quarantine THAT task (warning + KeyError naming
+    the path), not refuse the whole bank: opening still succeeds and the
+    healthy tasks keep serving."""
+    params = _tiny_peqa_params()
+    seed = ScaleBank(root=str(tmp_path))
+    seed.add("good", params)
     (tmp_path / "broken.npz").write_bytes(b"this is not a zip archive")
-    with pytest.raises(ValueError, match="broken.npz"):
-        ScaleBank(root=str(tmp_path))
+
+    bank = ScaleBank(root=str(tmp_path))      # opening must NOT raise
+    assert set(bank.names()) == {"broken", "good"}
+    with pytest.warns(RuntimeWarning, match="broken.npz"):
+        with pytest.raises(KeyError, match="broken.npz"):
+            bank.tasks["broken"]
+    assert "broken" in bank.quarantined
+    assert set(bank.names()) == {"good"}      # dropped from the index
+    # the healthy task still loads bit-exact
+    for path, a in seed.tasks["good"].items():
+        np.testing.assert_array_equal(bank.tasks["good"][path], a)
+
+
+def test_truncated_add_quarantines_on_reopen(tmp_path):
+    """Regression for the non-atomic ``add``: truncate a valid npz (what a
+    crash mid-``np.savez`` used to leave at the FINAL path) and re-open the
+    bank — the truncated task quarantines instead of poisoning the open."""
+    params = _tiny_peqa_params()
+    bank = ScaleBank(root=str(tmp_path))
+    bank.add("whole", params)
+    bank.add("torn", _bump_scales(params, 2.0))
+    torn = tmp_path / "torn.npz"
+    torn.write_bytes(torn.read_bytes()[: torn.stat().st_size // 2])
+
+    reopened = ScaleBank(root=str(tmp_path))
+    with pytest.warns(RuntimeWarning, match="torn"):
+        with pytest.raises(KeyError):
+            reopened.tasks["torn"]
+    assert "torn" in reopened.quarantined
+    switched = reopened.switch(params, "whole")   # rest of the bank serves
+    for path, expect in reopened.tasks["whole"].items():
+        np.testing.assert_array_equal(extract_scales(switched)[path], expect)
+
+
+def test_add_leaves_no_tmp_files(tmp_path):
+    """The atomic write must clean up after itself: exactly one file per
+    task in the root, no ``.tmp`` droppings for the init scan to trip on."""
+    params = _tiny_peqa_params()
+    bank = ScaleBank(root=str(tmp_path))
+    bank.add("a", params)
+    bank.add("a", params)                     # overwrite in place
+    assert sorted(p.name for p in tmp_path.iterdir()) == ["a.npz"]
 
 
 def test_local_nbytes_uses_padded_shard_shape():

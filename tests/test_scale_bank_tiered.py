@@ -1,0 +1,264 @@
+"""Tiered ScaleBank: device ResidentStack ← bounded host LRU ← lazy disk.
+
+The tier state machine under test (docs/SERVING.md "Tiered ScaleBank"):
+
+  * init scans FILENAMES only — zero task payload bytes touched;
+  * promotion disk→host→device on demand (and ahead of demand through
+    ``Engine.serve``'s prefetch tick), demotion host-side under
+    ``host_capacity`` pressure, reload after a prefetch-then-evict race;
+  * ``ensure`` returning None (all rows pinned) never takes the host tier
+    down with it — the payload stays servable;
+  * token-for-token equality of a lazy tiered bank vs the same bank
+    eagerly warmed (``warm_all``), on mixed-task traffic through both
+    schedulers, with the virtual tier costs charged only as the unhidden
+    remainder.
+
+Plus the two shape/validation regressions that ride along: the shared
+task-dim helper (rank-1 scale leaves now raise instead of stacking on one
+axis and installing on another) and ``ResidentStack`` warm-list
+validation (duplicates raise, unknown names warn).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.configs.base import QuantConfig, TuningConfig
+from repro.core import policies
+from repro.core import scale_bank as sb
+from repro.models import registry
+from repro.serve import ServeConfig
+from repro.train.serve import Engine, Request
+
+TASKS = ("tA", "tB", "tC")
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    cfg = configs.paper_lm(n_layers=1, d_model=32, n_heads=2, d_ff=64,
+                           vocab=64).replace(
+        tuning=TuningConfig(mode="peqa"),
+        quant=QuantConfig(bits=4, n_grid=2))
+    api = registry.build(cfg)
+    rng = jax.random.PRNGKey(0)
+    p, _ = policies.prepare(api.init(rng), cfg, rng)
+    p = jax.tree.map(np.asarray, p)          # host master (swaps may donate)
+    root = str(tmp_path_factory.mktemp("bank"))
+    seed = sb.ScaleBank(root=root)
+    rngs = np.random.default_rng(7)
+
+    def bump(params):
+        return jax.tree_util.tree_map_with_path(
+            lambda kp, l: l * rngs.uniform(0.8, 1.2, np.shape(l))
+            .astype(np.asarray(l).dtype)
+            if str(getattr(kp[-1], "key", "")) == "scale" else l, params)
+
+    seed.add(TASKS[0], p)
+    for t in TASKS[1:]:
+        seed.add(t, bump(p))
+    return cfg, api, p, root
+
+
+def _engine(setup, root=None, host_capacity=None):
+    cfg, api, p, bank_root = setup
+    bank = sb.ScaleBank(root=bank_root if root is None else root,
+                        host_capacity=host_capacity)
+    return Engine(api, jax.tree.map(jnp.asarray, p), bank=bank)
+
+
+def _requests(cfg, n=9, **kw):
+    return [Request(
+        tokens=(np.arange(4, dtype=np.int32) * (i + 1)) % cfg.vocab_size,
+        n_new=(4, 6, 8)[i % 3], task=TASKS[i % 3], **kw) for i in range(n)]
+
+
+# --------------------------------------------------------------- tier 2 → 1
+def test_init_touches_zero_payload_bytes(setup):
+    bank = sb.ScaleBank(root=setup[3])
+    assert set(bank.names()) == set(TASKS)
+    assert bank.stats.payload_bytes_loaded == 0
+    assert bank.stats.disk_loads == 0
+    assert not any(bank.loaded(t) for t in TASKS)
+
+
+def test_promotion_disk_to_host_to_device(setup):
+    cfg, api, p, root = setup
+    bank = sb.ScaleBank(root=root)
+    rs = sb.ResidentStack(bank, jax.tree.map(jnp.asarray, p), capacity=2)
+    assert not bank.loaded("tB")
+    row = rs.ensure("tB")                     # device promotion pulls tier 2
+    assert rs.names[row] == "tB"
+    assert bank.loaded("tB") and bank.stats.disk_loads == 1
+    rs.ensure("tB")                           # device hit: no new load
+    assert bank.stats.disk_loads == 1
+
+
+def test_host_demotion_under_pressure_and_reload(setup):
+    bank = sb.ScaleBank(root=setup[3], host_capacity=1)
+    a = bank.tasks["tA"]
+    _ = bank.tasks["tB"]                      # evicts tA (LRU, capacity 1)
+    assert not bank.loaded("tA") and bank.loaded("tB")
+    assert bank.stats.host_evictions == 1
+    again = bank.tasks["tA"]                  # demoted set reloads from disk
+    assert bank.stats.disk_loads == 3
+    for path in a:
+        np.testing.assert_array_equal(a[path], again[path])
+
+
+def test_prefetch_then_evict_before_admit_reloads(setup):
+    """The race satellite: a prefetched payload demoted before its request
+    is admitted must simply reload — ``prefetch`` then pressure then
+    access serves the same bytes."""
+    bank = sb.ScaleBank(root=setup[3], host_capacity=1)
+    assert bank.prefetch("tC") and bank.loaded("tC")
+    _ = bank.tasks["tA"]                      # pressure evicts the prefetch
+    assert not bank.loaded("tC")
+    assert bank.prefetch("tC")                # idempotent second warm
+    np.testing.assert_array_equal(
+        bank.tasks["tC"]["layers/attn/wq/scale"],
+        sb.ScaleBank(root=setup[3]).tasks["tC"]["layers/attn/wq/scale"])
+
+
+def test_unbacked_sets_never_evicted(setup):
+    bank = sb.ScaleBank(root=setup[3], host_capacity=1)
+    bank.tasks["mem"] = {"x/scale": np.ones((2, 1), np.float32)}
+    _ = bank.tasks["tA"]
+    _ = bank.tasks["tB"]
+    assert bank.loaded("mem")                 # no file to reload it from
+    assert "mem" in bank.tasks and len(bank.tasks) == len(TASKS) + 1
+
+
+def test_all_rows_pinned_host_tier_still_serves(setup):
+    cfg, api, p, root = setup
+    bank = sb.ScaleBank(root=root)
+    rs = sb.ResidentStack(bank, jax.tree.map(jnp.asarray, p), capacity=2)
+    rs.ensure("tA"), rs.ensure("tB")
+    assert rs.ensure("tC", pinned={"tA", "tB"}) is None
+    # the device tier is saturated but tier 1 still serves the payload
+    assert bank.tasks["tC"]["layers/attn/wq/scale"].shape[0] > 0
+    assert bank.loaded("tC")                  # ensure() already promoted it
+
+
+# ------------------------------------------------------------ serve equality
+def test_tiered_vs_eager_token_equal_resident(setup):
+    cfg = setup[0]
+    eager = _engine(setup)
+    assert eager.bank.warm_all() == len(TASKS)
+    ref = eager.serve(_requests(cfg),
+                      ServeConfig(n_slots=3, scheduler="resident"))
+    tiered = _engine(setup)                   # lazy: zero payloads at open
+    assert tiered.bank.stats.payload_bytes_loaded == 0
+    rep = tiered.serve(_requests(cfg),
+                       ServeConfig(n_slots=3, scheduler="resident"))
+    assert rep.tokens == ref.tokens           # token-for-token
+    assert all(t is not None for t in rep.tokens)
+    assert tiered.bank.stats.disk_loads == len(TASKS)
+
+
+def test_tiered_vs_eager_token_equal_bounded_host(setup):
+    """Host capacity below the task count (demotion + reload mid-serve)
+    must not change a single token."""
+    cfg = setup[0]
+    eager = _engine(setup)
+    eager.bank.warm_all()
+    ref = eager.serve(_requests(cfg),
+                      ServeConfig(n_slots=3, scheduler="drain"))
+    rep = _engine(setup, host_capacity=1).serve(
+        _requests(cfg), ServeConfig(n_slots=3, scheduler="drain",
+                                    host_cache_tasks=1))
+    assert rep.tokens == ref.tokens
+    assert rep.bank_host_evictions > 0        # the bound actually bit
+
+
+# --------------------------------------------------------- virtual tier cost
+def test_prefetch_hides_swap_cost_on_gapped_arrivals(setup):
+    """r0 admits cold (full disk+install charged); r1's task is warmed
+    during r0's decode, so its admit is a DEVICE hit with zero swap wait
+    and the whole cost lands in ``prefetch_hidden_s``."""
+    cfg = setup[0]
+    reqs = [Request(tokens=np.arange(4, dtype=np.int32), n_new=4,
+                    task="tA", arrival_s=0.0),
+            Request(tokens=np.arange(4, dtype=np.int32), n_new=4,
+                    task="tB", arrival_s=10.0)]
+    rep = _engine(setup).serve(reqs, ServeConfig(
+        n_slots=2, scheduler="resident", resident_tasks=2,
+        disk_load_s=0.5, install_s=0.25, prefetch_depth=2))
+    m0, m1 = rep.requests
+    assert m0.scale_tier == "disk"
+    assert m0.swap_wait_s == pytest.approx(0.75)   # nothing to hide behind
+    assert m1.scale_tier == "device"
+    assert m1.swap_wait_s == 0.0
+    assert rep.prefetch_hidden_s == pytest.approx(0.75)
+    assert rep.prefetch_issued == 2           # one load + one install
+    assert rep.tier_disk_loads == 1 and rep.tier_device_hits == 1
+    assert rep.swap_percentiles("device")["p99"] == 0.0
+    assert rep.swap_percentiles()["p99"] < 1.0     # < one step_s overall
+
+
+def test_drain_path_tier_metering(setup):
+    """Drain scheduler: cold switch = disk tier, same-task admit = device,
+    a drain-blocked task prefetched to host while the pool decodes pays
+    only the install on switch."""
+    cfg = setup[0]
+    reqs = [Request(tokens=np.arange(4, dtype=np.int32), n_new=4, task=t)
+            for t in ("tA", "tA", "tB")]
+    rep = _engine(setup).serve(reqs, ServeConfig(
+        n_slots=1, scheduler="drain",
+        disk_load_s=0.5, install_s=0.25, prefetch_depth=2))
+    tiers = [m.scale_tier for m in rep.requests]
+    assert tiers == ["disk", "device", "host"]
+    assert rep.requests[1].swap_wait_s == 0.0
+    assert rep.requests[2].swap_wait_s == pytest.approx(0.25)
+    assert rep.prefetch_hidden_s > 0.0
+
+
+def test_zero_cost_defaults_replay_identically(setup):
+    """disk_load_s = install_s = 0 (the defaults): tier counters populate
+    but the virtual clock and every SLO timestamp match a run with the
+    prefetcher disabled — pre-tiering workloads replay bit-identically."""
+    cfg = setup[0]
+    rep = _engine(setup).serve(_requests(cfg),
+                               ServeConfig(n_slots=3, scheduler="resident"))
+    off = _engine(setup).serve(
+        _requests(cfg), ServeConfig(n_slots=3, scheduler="resident",
+                                    prefetch_depth=0))
+    assert rep.tokens == off.tokens
+    assert [m.admit_s for m in rep.requests] == \
+        [m.admit_s for m in off.requests]
+    assert [m.finish_s for m in rep.requests] == \
+        [m.finish_s for m in off.requests]
+    assert rep.swap_wait_total_s == 0.0
+    assert (rep.tier_device_hits + rep.tier_host_hits
+            + rep.tier_disk_loads) == rep.n_served
+
+
+# ------------------------------------------------------- shape/warm satellites
+def test_rank1_scale_leaf_raises(setup):
+    """Regression: ``stack_scales`` used to park a rank-1 leaf's task dim
+    at axis 0 while the row install wrote along ``ndim - 3`` (= the LAST
+    axis after stacking) — silent wrong-axis writes.  Both now route
+    through ``task_stack_dim`` and refuse rank < 2 loudly."""
+    with pytest.raises(ValueError, match="rank"):
+        sb.task_stack_dim(1)
+    base = {"x/scale": np.ones((4,), np.float32)}
+    with pytest.raises(ValueError, match="rank"):
+        sb.stack_scales(base, [base, base])
+    stacked = {"x": {"scale": jnp.ones((3, 4), jnp.float32)}}
+    rows = {"x": {"scale": jnp.zeros((4,), jnp.float32)}}
+    with pytest.raises(ValueError, match="rank"):
+        sb._stack_row_install(stacked, rows, jnp.int32(0))
+    # rank 2 and 3 still place the task dim just before (out, G)
+    assert sb.task_stack_dim(2) == 0 and sb.task_stack_dim(3) == 1
+
+
+def test_warm_list_validation(setup):
+    cfg, api, p, root = setup
+    bank = sb.ScaleBank(root=root)
+    params = jax.tree.map(jnp.asarray, p)
+    with pytest.raises(ValueError, match="duplicate warm"):
+        sb.ResidentStack(bank, params, capacity=3, warm=("tA", "tA"))
+    with pytest.warns(RuntimeWarning, match="nope"):
+        rs = sb.ResidentStack(bank, params, capacity=2,
+                              warm=("tA", "nope"))
+    assert rs.names == ["tA", None]           # unknown dropped, no dead row
